@@ -1,0 +1,48 @@
+"""Benchmark harness plumbing: timing + the ``name,us_per_call,derived``
+CSV contract + TPU roofline-model derivations (this container is CPU-only,
+so every benchmark reports measured CPU time AND the v5e model time)."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+# v5e-class constants (launch/mesh.py)
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+ETHERNET_BW = 1.25e9        # 10 GbE, the paper's slow transport
+IB_BW = 6.0e9               # FDR InfiniBand ~56 Gb/s, the paper's fast one
+
+
+def time_call(fn: Callable[[], None], repeats: int = 5,
+              warmup: int = 1) -> float:
+    """Median wall time per call, seconds."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(name: str, seconds: float, derived: str = "") -> str:
+    line = f"{name},{seconds * 1e6:.1f},{derived}"
+    print(line)
+    return line
+
+
+def allreduce_model_time(bytes_total: int, n: int, bw: float,
+                         latency: float = 20e-6) -> float:
+    """Ring all-reduce: 2·b·(n-1)/n over the slowest link + per-step latency."""
+    if n <= 1:
+        return 0.0
+    return 2 * bytes_total * (n - 1) / n / bw + 2 * (n - 1) * latency
+
+
+def gather_model_time(bytes_total: int, n: int, bw: float,
+                      latency: float = 20e-6) -> float:
+    """Driver gather: all partitions funnel into one NIC, then host sum."""
+    return n * bytes_total / bw + n * latency

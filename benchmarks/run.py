@@ -1,0 +1,29 @@
+"""Benchmark harness: one entry per paper table/figure.
+
+  Table I  -> bench_allreduce   (driver-worker vs in-place collectives)
+  Table II -> bench_ptycho      (RAAR solver scaling)
+  Fig. 16  -> bench_tomo        (ART scaling + TomViz baseline)
+  Fig. 7-8 -> bench_streaming   (micro-batch pipeline overhead)
+
+Prints ``name,us_per_call,derived`` CSV. Roofline numbers for the LM cells
+come from the dry-run artifacts (launch/roofline.py), not from here.
+"""
+from __future__ import annotations
+
+import traceback
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from benchmarks import (bench_allreduce, bench_ptycho, bench_streaming,
+                            bench_tomo)
+    for mod in (bench_allreduce, bench_ptycho, bench_tomo, bench_streaming):
+        try:
+            mod.run()
+        except Exception:
+            print(f"{mod.__name__},nan,FAILED: "
+                  + traceback.format_exc().strip().splitlines()[-1])
+
+
+if __name__ == "__main__":
+    main()

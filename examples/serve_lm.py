@@ -1,0 +1,33 @@
+"""Serve a small LM with batched requests through the streaming pipeline.
+
+Requests land on a broker topic; micro-batches prefill once and decode
+greedily with the KV cache; the report compares per-batch latency to the
+batch interval (the paper's near-real-time criterion applied to serving).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py --requests 12 --gen 24
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import serve
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+    sys.argv = ["serve", "--arch", args.arch, "--reduced",
+                "--requests", str(args.requests), "--batch", str(args.batch),
+                "--prompt-len", str(args.prompt_len), "--gen", str(args.gen)]
+    serve.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""Synthetic ptychography experiment (paper §III uses the same
+simulation-based setup from the Sharp-Spark project).
+
+Generates: a complex object (smooth amplitude, structured phase), a coherent
+probe (Gaussian-apodized disk), an overlapping scan grid, and the measured
+diffraction magnitudes  sqrt(I_j) = |F(P · O_patch_j)|  per eq. (1).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class PtychoProblem:
+    object_true: jax.Array       # (H, W) complex64
+    probe_true: jax.Array        # (h, w) complex64
+    positions: np.ndarray        # (F, 2) int corner positions
+    magnitudes: jax.Array        # (F, h, w) fp32 = sqrt(I_j)
+
+    @property
+    def num_frames(self) -> int:
+        return len(self.positions)
+
+    @property
+    def frame_shape(self) -> tuple[int, int]:
+        return self.probe_true.shape
+
+
+def make_probe(size: int) -> jax.Array:
+    """Gaussian-apodized circular probe with a quadratic phase (defocus)."""
+    y, x = np.mgrid[:size, :size] - size / 2 + 0.5
+    r2 = (x**2 + y**2) / (size / 3.5) ** 2
+    amp = np.exp(-r2) * (r2 < 4.0)
+    phase = 0.8 * r2
+    return jnp.asarray((amp * np.exp(1j * phase)).astype(np.complex64))
+
+
+def make_object(size: int, seed: int = 0) -> jax.Array:
+    """Smooth random transmission function: amplitude in [0.7, 1],
+    phase in [-pi/2, pi/2] with low-frequency structure."""
+    rng = np.random.default_rng(seed)
+
+    def smooth(scale):
+        small = rng.standard_normal((size // scale, size // scale))
+        img = np.kron(small, np.ones((scale, scale)))[:size, :size]
+        k = np.ones((5, 5)) / 25.0
+        from scipy.signal import convolve2d
+        return convolve2d(img, k, mode="same", boundary="symm")
+
+    amp = 0.85 + 0.15 * np.tanh(smooth(8))
+    phase = 1.4 * np.tanh(smooth(4)) + 0.6 * np.tanh(smooth(16))
+    return jnp.asarray((amp * np.exp(1j * phase)).astype(np.complex64))
+
+
+def scan_grid(obj_size: int, probe_size: int, step: int) -> np.ndarray:
+    """Overlapping raster grid of frame corner positions (+ small jitter)."""
+    rng = np.random.default_rng(1)
+    lim = obj_size - probe_size
+    xs = np.arange(0, lim + 1, step)
+    pos = np.array([(y, x) for y in xs for x in xs])
+    jitter = rng.integers(-step // 4, step // 4 + 1, pos.shape)
+    return np.clip(pos + jitter, 0, lim).astype(np.int32)
+
+
+def gather_patches(obj: jax.Array, positions: np.ndarray,
+                   frame: int) -> jax.Array:
+    """(F, h, w) object patches at the scan positions."""
+    pos = jnp.asarray(positions)
+    iy = pos[:, 0, None, None] + jnp.arange(frame)[None, :, None]
+    ix = pos[:, 1, None, None] + jnp.arange(frame)[None, None, :]
+    return obj[iy, ix]
+
+
+def scatter_add_patches(canvas: jax.Array, positions: np.ndarray,
+                        patches: jax.Array) -> jax.Array:
+    """Σ_j patch_j scattered at its position (the paper's eq. 4/5 sums)."""
+    frame = patches.shape[-1]
+    pos = jnp.asarray(positions)
+    iy = pos[:, 0, None, None] + jnp.arange(frame)[None, :, None]
+    ix = pos[:, 1, None, None] + jnp.arange(frame)[None, None, :]
+    return canvas.at[iy, ix].add(patches)
+
+
+def simulate(obj_size: int = 256, probe_size: int = 64, step: int = 12,
+             seed: int = 0, photons: float = 0.0) -> PtychoProblem:
+    """Build the synthetic problem; ``photons>0`` adds Poisson noise."""
+    obj = make_object(obj_size, seed)
+    probe = make_probe(probe_size)
+    positions = scan_grid(obj_size, probe_size, step)
+    patches = gather_patches(obj, positions, probe_size)
+    exit_waves = probe[None] * patches
+    far = jnp.fft.fft2(exit_waves)
+    intensity = jnp.square(jnp.abs(far))
+    if photons > 0:
+        rng = np.random.default_rng(seed + 1)
+        scale = photons / jnp.maximum(jnp.mean(intensity), 1e-9)
+        noisy = rng.poisson(np.asarray(intensity * scale)) / np.asarray(scale)
+        intensity = jnp.asarray(noisy.astype(np.float32))
+    return PtychoProblem(object_true=obj, probe_true=probe,
+                         positions=np.asarray(positions),
+                         magnitudes=jnp.sqrt(intensity).astype(jnp.float32))

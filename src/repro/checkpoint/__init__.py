@@ -1,0 +1,4 @@
+"""Checkpoint substrate: sharded + async + elastic restore."""
+from repro.checkpoint.ckpt import AsyncCheckpointer, latest_step, restore, save
+
+__all__ = ["AsyncCheckpointer", "latest_step", "restore", "save"]

@@ -1,0 +1,169 @@
+"""Sharded, async, elastic checkpointing (no orbax in this container).
+
+Layout:  <dir>/step_<N>/
+            manifest.json      — tree structure, dtypes, shapes, step
+            <flat.key>.npy     — one array per leaf (host-gathered)
+         <dir>/LATEST          — atomic pointer (written last)
+
+Properties needed at 1000-node scale, all implemented and tested:
+  * atomicity: writes go to ``step_N.tmp`` and are renamed only after the
+    manifest is fsynced — a crash mid-save never corrupts the latest good
+    checkpoint;
+  * async: ``AsyncCheckpointer`` snapshots to host memory synchronously
+    (cheap) and writes on a background thread — training continues;
+  * elastic restore: ``restore`` takes target shardings; arrays are
+    device_put with the *new* mesh layout, so a job can restart on a
+    different worker count (tests shrink 8 -> 4 virtual devices);
+  * bf16-safe: bfloat16 leaves are stored as uint16 with dtype recorded in
+    the manifest (npy has no native bf16).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils import get_logger
+
+log = get_logger(__name__)
+
+_SEP = "__"
+
+
+def _flatten(tree: Any) -> dict[str, Any]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(_path_str(p) for p in path)
+        out[key] = leaf
+    return out
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def save(directory: str, step: int, tree: Any) -> str:
+    """Synchronous sharded save. Returns the checkpoint path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _flatten(tree)
+    manifest = {"step": step, "leaves": {}}
+    for key, leaf in flat.items():
+        arr = np.asarray(jax.device_get(leaf))
+        dtype = str(arr.dtype)
+        if arr.dtype == jnp.bfloat16:
+            arr = arr.view(np.uint16)
+            dtype = "bfloat16"
+        np.save(os.path.join(tmp, key + ".npy"), arr)
+        manifest["leaves"][key] = {"dtype": dtype,
+                                   "shape": list(arr.shape)}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    latest_tmp = os.path.join(directory, "LATEST.tmp")
+    with open(latest_tmp, "w") as f:
+        f.write(os.path.basename(final))
+    os.replace(latest_tmp, os.path.join(directory, "LATEST"))
+    log.info("checkpoint saved: %s", final)
+    return final
+
+
+def latest_step(directory: str) -> int | None:
+    pointer = os.path.join(directory, "LATEST")
+    if not os.path.exists(pointer):
+        return None
+    with open(pointer) as f:
+        name = f.read().strip()
+    return int(name.split("_")[-1])
+
+
+def restore(directory: str, like: Any, step: int | None = None,
+            shardings: Any = None) -> tuple[Any, int]:
+    """Restore into the structure of ``like`` (pytree of arrays or
+    ShapeDtypeStructs). ``shardings`` (matching pytree of Shardings) reshards
+    for the *current* mesh — the elastic-restart path."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    flat_like = _flatten(like)
+    flat_shardings = _flatten(shardings) if shardings is not None else {}
+    restored: dict[str, Any] = {}
+    for key in flat_like:
+        meta = manifest["leaves"].get(key)
+        if meta is None:
+            raise KeyError(f"checkpoint {path} missing leaf {key}")
+        arr = np.load(os.path.join(path, key + ".npy"))
+        if meta["dtype"] == "bfloat16":
+            arr = arr.view(jnp.bfloat16)
+        sh = flat_shardings.get(key)
+        restored[key] = (jax.device_put(arr, sh) if sh is not None
+                         else jnp.asarray(arr))
+    leaves = [restored[key] for key in flat_like]
+    treedef = jax.tree_util.tree_structure(like)
+    return jax.tree_util.tree_unflatten(treedef, leaves), step
+
+
+class AsyncCheckpointer:
+    """Snapshot-to-host synchronously, write on a background thread."""
+
+    def __init__(self, directory: str, keep: int = 3) -> None:
+        self.directory = directory
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        self._error: Exception | None = None
+
+    def save(self, step: int, tree: Any) -> None:
+        self.wait()
+        host_tree = jax.tree_util.tree_map(
+            lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def _write():
+            try:
+                save(self.directory, step, host_tree)
+                self._gc()
+            except Exception as exc:  # surfaced on next wait()
+                self._error = exc
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc(self) -> None:
+        if not os.path.isdir(self.directory):
+            return
+        steps = sorted(d for d in os.listdir(self.directory)
+                       if d.startswith("step_") and not d.endswith(".tmp"))
+        for old in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, old),
+                          ignore_errors=True)

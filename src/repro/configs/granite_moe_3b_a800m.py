@@ -1,0 +1,33 @@
+"""granite-moe-3b-a800m [moe] — 32L d_model=1536 24H (GQA kv=8) d_ff=512
+vocab=49155, MoE 40 experts top-8.
+[hf:ibm-granite/granite-3.0-1b-a400m-base; hf]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-3b-a800m",
+    family="moe",
+    num_layers=32,
+    d_model=1536,
+    num_heads=24,
+    num_kv_heads=8,
+    head_dim=64,
+    d_ff=512,                      # per-expert
+    vocab_size=49155,
+    num_experts=40,
+    experts_per_token=8,
+    capacity_factor=1.25,
+    hidden_act="silu",
+    mlp_gated=True,
+    norm="rmsnorm",
+    tie_embeddings=True,
+    rope_theta=10_000.0,
+    remat="full",
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(num_layers=2, d_model=64, num_heads=4,
+                          num_kv_heads=2, head_dim=16, d_ff=32,
+                          vocab_size=256, num_experts=4,
+                          experts_per_token=2, remat="none")

@@ -1,0 +1,29 @@
+"""starcoder2-3b [dense] — 30L d_model=3072 24H (GQA kv=2) d_ff=12288
+vocab=49152 — GQA, RoPE, LayerNorm, non-gated GELU MLP.
+[arXiv:2402.19173; hf]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-3b",
+    family="dense",
+    num_layers=30,
+    d_model=3072,
+    num_heads=24,
+    num_kv_heads=2,
+    head_dim=128,
+    d_ff=12288,
+    vocab_size=49152,
+    hidden_act="gelu",
+    mlp_gated=False,
+    norm="layernorm",
+    rope_theta=100_000.0,
+    remat="full",
+    pad_attention_heads=True,   # heads % TP != 0: pad, don't replicate (§Perf A1)
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(num_layers=2, d_model=64, num_heads=4,
+                          num_kv_heads=2, head_dim=16, d_ff=128,
+                          vocab_size=256, remat="none")

@@ -1,0 +1,131 @@
+"""An in-process message broker with Kafka semantics (paper §II, Fig. 7-8).
+
+The paper ingests detector streams through Kafka: topics split into
+partitions, each partition an append-only totally-ordered log addressed by
+offsets; no ordering across partitions; messages are (key, value) byte pairs.
+``KafkaUtils.createRDD(offsets)`` — the paper's chosen "more flexible option"
+— becomes :func:`create_rdd` here: an RDD whose partitions are explicit
+``OffsetRange`` reads.
+
+The broker is in-process because this container is one host, but the API is
+transport-shaped: producers append, consumers poll by (topic, partition,
+offset), and nothing downstream (DStream scheduler, bridge, solvers) can tell
+the difference. The paper's own future-work item — "augment the Kafka
+Receiver with interfaces to other data sources, such as ZeroMQ" — is the
+``Source`` protocol in ``data/sources.py``.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+from typing import Any, Callable, Sequence
+
+from repro.core.rdd import RDD, Context
+
+
+@dataclass(frozen=True)
+class Record:
+    key: bytes | None
+    value: Any
+    offset: int
+    timestamp: float = 0.0
+
+
+@dataclass(frozen=True)
+class OffsetRange:
+    """Paper Fig. 8: ``OffsetRange(topic, partition, fromOffset, untilOffset)``."""
+    topic: str
+    partition: int
+    start: int
+    until: int
+
+    def count(self) -> int:
+        return max(0, self.until - self.start)
+
+
+class _PartitionLog:
+    def __init__(self) -> None:
+        self._records: list[Record] = []
+        self._lock = threading.Lock()
+
+    def append(self, key: bytes | None, value: Any, timestamp: float) -> int:
+        with self._lock:
+            offset = len(self._records)
+            self._records.append(Record(key, value, offset, timestamp))
+            return offset
+
+    def read(self, start: int, until: int) -> list[Record]:
+        with self._lock:
+            end = min(until, len(self._records))
+            return self._records[start:end]
+
+    def end_offset(self) -> int:
+        with self._lock:
+            return len(self._records)
+
+
+class Broker:
+    """Topics → partitions → append-only logs. Thread-safe."""
+
+    def __init__(self) -> None:
+        self._topics: dict[str, list[_PartitionLog]] = {}
+        self._lock = threading.Lock()
+
+    def create_topic(self, topic: str, partitions: int = 1) -> None:
+        with self._lock:
+            if topic in self._topics:
+                raise ValueError(f"topic {topic!r} exists")
+            self._topics[topic] = [_PartitionLog() for _ in range(partitions)]
+
+    def topics(self) -> list[str]:
+        with self._lock:
+            return sorted(self._topics)
+
+    def num_partitions(self, topic: str) -> int:
+        return len(self._topic(topic))
+
+    def _topic(self, topic: str) -> list[_PartitionLog]:
+        with self._lock:
+            if topic not in self._topics:
+                raise KeyError(f"unknown topic {topic!r}")
+            return self._topics[topic]
+
+    # -- producer ---------------------------------------------------------
+    def produce(self, topic: str, value: Any, key: bytes | None = None,
+                partition: int | None = None, timestamp: float = 0.0) -> int:
+        logs = self._topic(topic)
+        if partition is None:
+            partition = (hash(key) if key is not None else 0) % len(logs)
+        return logs[partition].append(key, value, timestamp)
+
+    # -- consumer ---------------------------------------------------------
+    def read(self, rng: OffsetRange) -> list[Record]:
+        return self._topic(rng.topic)[rng.partition].read(rng.start, rng.until)
+
+    def end_offset(self, topic: str, partition: int = 0) -> int:
+        return self._topic(topic)[partition].end_offset()
+
+    def end_offsets(self, topic: str) -> list[int]:
+        return [log.end_offset() for log in self._topic(topic)]
+
+
+def create_rdd(context: Context, broker: Broker,
+               offset_ranges: Sequence[OffsetRange],
+               value_decoder: Callable[[Any], Any] | None = None) -> RDD:
+    """``KafkaUtils.createRDD`` — one RDD partition per OffsetRange.
+
+    The read happens lazily inside the partition task, so a lost partition is
+    recomputed by re-reading the broker at the same offsets (exactly Kafka's
+    replayability property that makes the lineage story work end-to-end).
+    """
+    ranges = list(offset_ranges)
+
+    def compute(idx: int) -> list[Any]:
+        records = broker.read(ranges[idx])
+        values = [r.value for r in records]
+        if value_decoder is not None:
+            values = [value_decoder(v) for v in values]
+        return values
+
+    rdd = RDD(context, len(ranges), [], compute, name="kafkaRDD")
+    return rdd

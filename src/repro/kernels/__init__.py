@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the compute hot spots the paper optimizes (SHARP's
+GPU kernels -> TPU): ptycho modulus projection, RAAR combine, overlap
+products, tomography ART row sweep, and flash attention for the LM serving
+path. Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py
+(jit'd wrapper with platform dispatch) and ref.py (pure-jnp oracle);
+tests sweep shapes/dtypes against the oracle in interpret mode."""

@@ -1,0 +1,61 @@
+"""ART row-action sweep (tomography, paper Fig. 12), Pallas TPU kernel.
+
+Kaczmarz/ART is inherently sequential over rays:
+
+    for each ray j:   f += β · (b_j - ⟨A_j, f⟩) / ‖A_j‖² · A_j
+
+TomViz runs this as a Python/NumPy loop; SHARP-era GPUs would need global
+synchronization per row. The TPU-idiomatic port: the image f lives in VMEM
+as an output block with a CONSTANT index map — Pallas keeps it resident
+across sequential grid steps (grid = (iters, rows)) while the rows of the
+(pre-normalized) system matrix stream HBM→VMEM one block at a time. The
+per-step work (dot + axpy over Ncol) is VPU-shaped; data movement is one
+row per step, i.e. the streaming bound the roofline predicts.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _make_kernel(beta: float):
+    def kernel(a_ref, b_ref, rip_ref, f0_ref, f_ref):
+        it = pl.program_id(0)
+        j = pl.program_id(1)
+
+        @pl.when(jnp.logical_and(it == 0, j == 0))
+        def _():
+            f_ref[...] = f0_ref[...]
+
+        row = a_ref[0, :]
+        f = f_ref[...]
+        resid = (b_ref[0] - jnp.sum(row * f)) * rip_ref[0]
+        f_ref[...] = f + beta * resid * row
+
+    return kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("beta", "iters", "interpret"))
+def art_sweep(A: jax.Array, b: jax.Array, inv_rip: jax.Array,
+              f0: jax.Array, beta: float = 1.0, iters: int = 1,
+              interpret: bool = False) -> jax.Array:
+    """A: (Nrow, Ncol) fp32; b: (Nrow,); inv_rip: (Nrow,) = 1/‖A_j‖²;
+    f0: (Ncol,) initial image. Returns f after ``iters`` full sweeps."""
+    nrow, ncol = A.shape
+    return pl.pallas_call(
+        _make_kernel(beta),
+        grid=(iters, nrow),
+        in_specs=[
+            pl.BlockSpec((1, ncol), lambda i, j: (j, 0)),   # row stream
+            pl.BlockSpec((1,), lambda i, j: (j,)),
+            pl.BlockSpec((1,), lambda i, j: (j,)),
+            pl.BlockSpec((ncol,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((ncol,), lambda i, j: (0,)),  # VMEM-resident
+        out_shape=jax.ShapeDtypeStruct((ncol,), jnp.float32),
+        interpret=interpret,
+    )(A, b, inv_rip, f0)

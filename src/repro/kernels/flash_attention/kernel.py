@@ -1,0 +1,106 @@
+"""Causal flash attention (serving/prefill hot spot), Pallas TPU kernel.
+
+Grid (B·H, n_q, n_kv), kv innermost. Running max / denominator / accumulator
+live in VMEM scratch across the kv sweep for one q block (classic
+flash-attention dataflow; this is what replaces the XLA blocked-attention
+path's HBM round-trips for the score tiles — the dominant memory-roofline
+term measured in §Perf). Causal skipping is structural: out-of-reach kv
+blocks are masked via @pl.when, so no MXU work is issued for them.
+
+Block shapes default to (block_q, head_dim) × (block_kv, head_dim) =
+(256, hd) × (512, hd): for hd=128 fp32 scratch is 256·128·4 ≈ 128 KiB plus
+the (256, 512) score tile ≈ 512 KiB — comfortably inside the ~16 MiB VMEM
+with double buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _make_kernel(scale: float, block_q: int, block_kv: int, n_kv: int,
+                 causal: bool):
+    def kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr):
+        i_q = pl.program_id(1)
+        i_k = pl.program_id(2)
+
+        @pl.when(i_k == 0)
+        def _init():
+            m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+            l_scr[...] = jnp.zeros_like(l_scr)
+            acc_scr[...] = jnp.zeros_like(acc_scr)
+
+        def tile():
+            q = q_ref[0].astype(jnp.float32)                  # (bq, hd)
+            k = k_ref[0].astype(jnp.float32)                  # (bkv, hd)
+            v = v_ref[0].astype(jnp.float32)
+            s = jax.lax.dot_general(
+                q, k, (((1,), (1,)), ((), ()))) * scale        # (bq, bkv)
+            if causal:
+                qpos = i_q * block_q + jax.lax.broadcasted_iota(
+                    jnp.int32, (block_q, block_kv), 0)
+                kpos = i_k * block_kv + jax.lax.broadcasted_iota(
+                    jnp.int32, (block_q, block_kv), 1)
+                s = jnp.where(kpos <= qpos, s, NEG_INF)
+            m_prev = m_scr[...]
+            m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+            p = jnp.exp(s - m_new[:, None])
+            alpha = jnp.exp(m_prev - m_new)
+            l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+            acc_scr[...] = (acc_scr[...] * alpha[:, None]
+                            + jax.lax.dot_general(
+                                p, v, (((1,), (0,)), ((), ()))))
+            m_scr[...] = m_new
+
+        if causal:
+            # kv block reachable iff its first row index <= q block's last
+            reachable = i_k * block_kv <= i_q * block_q + block_q - 1
+            pl.when(reachable)(tile)
+        else:
+            tile()
+
+        @pl.when(i_k == n_kv - 1)
+        def _finish():
+            l = jnp.maximum(l_scr[...], 1e-30)
+            o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_kv",
+                                              "causal", "interpret"))
+def flash_attention_bhsd(q: jax.Array, k: jax.Array, v: jax.Array,
+                         block_q: int = 256, block_kv: int = 512,
+                         causal: bool = True,
+                         interpret: bool = False) -> jax.Array:
+    """q, k, v: (BH, S, hd) — S divisible by block sizes. Returns (BH, S, hd)."""
+    BH, S, hd = q.shape
+    Skv = k.shape[1]
+    bq = min(block_q, S)
+    bkv = min(block_kv, Skv)
+    n_q, n_kv = S // bq, Skv // bkv
+    scale = 1.0 / np.sqrt(hd)
+    return pl.pallas_call(
+        _make_kernel(scale, bq, bkv, n_kv, causal),
+        grid=(BH, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bkv, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bkv, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),      # running max
+            pltpu.VMEM((bq,), jnp.float32),      # running denominator
+            pltpu.VMEM((bq, hd), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

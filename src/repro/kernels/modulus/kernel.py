@@ -1,0 +1,52 @@
+"""Modulus-constraint projection π₁ (ptychography), Pallas TPU kernel.
+
+    π₁(ψ)(q) = F⁻¹[ I(q) · Fψ(q) / |Fψ(q)| ]
+
+The FFTs stay in XLA (TPU has native FFT); this kernel fuses the elementwise
+magnitude renormalization — the per-frame hot loop SHARP runs as a CUDA
+kernel. Complex data travels as separate re/im planes (TPU VREGs are real).
+
+Blocking: frames are tiled along the leading axis; each (fb, H, W) block of
+the five planes (re, im, mag -> out_re, out_im) resides in VMEM. For
+128×128 frames and fb=16 the working set is 16·64 KiB·5 ≈ 5 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS = 1e-12
+
+
+def _modulus_kernel(re_ref, im_ref, mag_ref, ore_ref, oim_ref):
+    re = re_ref[...]
+    im = im_ref[...]
+    mag = mag_ref[...]
+    norm = jax.lax.rsqrt(re * re + im * im + EPS)
+    scale = mag * norm
+    ore_ref[...] = re * scale
+    oim_ref[...] = im * scale
+
+
+@functools.partial(jax.jit, static_argnames=("block_frames", "interpret"))
+def modulus_project(re: jax.Array, im: jax.Array, mag: jax.Array,
+                    block_frames: int = 16,
+                    interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """re, im, mag: (F, H, W) fp32 -> (out_re, out_im)."""
+    F, H, W = re.shape
+    fb = min(block_frames, F)
+    grid = (-(-F // fb),)
+    spec = pl.BlockSpec((fb, H, W), lambda i: (i, 0, 0))
+    out_shape = [jax.ShapeDtypeStruct((F, H, W), re.dtype)] * 2
+    ore, oim = pl.pallas_call(
+        _modulus_kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=[spec, spec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(re, im, mag)
+    return ore, oim

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the modulus projection kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.modulus.kernel import EPS
+
+
+def modulus_project_ref(re: jax.Array, im: jax.Array, mag: jax.Array
+                        ) -> tuple[jax.Array, jax.Array]:
+    norm = jax.lax.rsqrt(re * re + im * im + EPS)
+    scale = mag * norm
+    return re * scale, im * scale
+
+
+def modulus_project_complex(psi_f: jax.Array, mag: jax.Array) -> jax.Array:
+    """Complex-typed reference used by the solver-level tests."""
+    scale = mag / jnp.maximum(jnp.abs(psi_f), jnp.sqrt(EPS))
+    return psi_f * scale

@@ -1,0 +1,49 @@
+"""Overlap-update products (ptychography, paper eqs. 4-5), Pallas TPU kernel.
+
+Per frame j the probe/object updates need the complex products
+
+    num_j = ψ_j · conj(w_j)      (w = probe for the object update,
+    den_j = |w_j|²                object patch for the probe update)
+
+SHARP computes these inside CUDA kernels with atomics for the scatter; on
+TPU the scatter-add runs as an XLA segment-sum over precomputed patch
+indices (apps/ptycho/solver.py) while this kernel fuses the per-frame
+products — one VMEM pass over 4 input planes, 3 outputs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _overlap_kernel(a_re, a_im, b_re, b_im, n_re, n_im, den):
+    bre = b_re[...]
+    bim = b_im[...]
+    are = a_re[...]
+    aim = a_im[...]
+    # a · conj(b)
+    n_re[...] = are * bre + aim * bim
+    n_im[...] = aim * bre - are * bim
+    den[...] = bre * bre + bim * bim
+
+
+@functools.partial(jax.jit, static_argnames=("block_frames", "interpret"))
+def overlap_products(a_re, a_im, b_re, b_im, block_frames: int = 16,
+                     interpret: bool = False):
+    """a, b: (F, H, W) fp32 planes -> (num_re, num_im, |b|²)."""
+    F, H, W = a_re.shape
+    fb = min(block_frames, F)
+    grid = (-(-F // fb),)
+    spec = pl.BlockSpec((fb, H, W), lambda i: (i, 0, 0))
+    out_shape = [jax.ShapeDtypeStruct((F, H, W), a_re.dtype)] * 3
+    return pl.pallas_call(
+        _overlap_kernel,
+        grid=grid,
+        in_specs=[spec] * 4,
+        out_specs=[spec] * 3,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(a_re, a_im, b_re, b_im)

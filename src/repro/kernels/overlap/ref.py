@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the overlap products kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def overlap_products_ref(a_re, a_im, b_re, b_im):
+    n_re = a_re * b_re + a_im * b_im
+    n_im = a_im * b_re - a_re * b_im
+    den = b_re * b_re + b_im * b_im
+    return n_re, n_im, den
+
+
+def overlap_products_complex(a: jax.Array, b: jax.Array
+                             ) -> tuple[jax.Array, jax.Array]:
+    """(a · conj(b), |b|²)."""
+    return a * jnp.conj(b), jnp.square(jnp.abs(b))

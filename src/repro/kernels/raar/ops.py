@@ -1,0 +1,26 @@
+"""Jit'd wrapper for the RAAR combine (complex in/out, platform dispatch)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.raar import kernel, ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def raar_combine(psi: jax.Array, p1: jax.Array, p21: jax.Array,
+                 p2: jax.Array, beta: float = 0.75,
+                 use_pallas: bool | None = None) -> jax.Array:
+    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    if not use_pallas:
+        return ref.raar_combine_complex(psi, p1, p21, p2, beta)
+    planes = []
+    for z in (psi, p1, p21, p2):
+        planes += [jnp.real(z).astype(jnp.float32),
+                   jnp.imag(z).astype(jnp.float32)]
+    o_re, o_im = kernel.raar_combine(*planes, beta=beta,
+                                     interpret=not _on_tpu())
+    return jax.lax.complex(o_re, o_im)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the RAAR combine kernel."""
+from __future__ import annotations
+
+import jax
+
+
+def raar_combine_ref(psi_re, psi_im, p1_re, p1_im, p21_re, p21_im,
+                     p2_re, p2_im, beta: float = 0.75):
+    o_re = (2 * beta * p21_re + (1 - 2 * beta) * p1_re
+            + beta * (psi_re - p2_re))
+    o_im = (2 * beta * p21_im + (1 - 2 * beta) * p1_im
+            + beta * (psi_im - p2_im))
+    return o_re, o_im
+
+
+def raar_combine_complex(psi: jax.Array, p1: jax.Array, p21: jax.Array,
+                         p2: jax.Array, beta: float = 0.75) -> jax.Array:
+    return 2 * beta * p21 + (1 - 2 * beta) * p1 + beta * (psi - p2)

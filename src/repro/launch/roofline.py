@@ -1,0 +1,75 @@
+"""Roofline table generator: aggregates dry-run JSON records into the
+EXPERIMENTS.md §Roofline markdown table.
+
+    PYTHONPATH=src python -m repro.launch.roofline [--mesh single] [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+RESULTS = os.path.normpath(os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "results", "dryrun"))
+
+BOTTLENECK_FIXES = {
+    "compute": "more chips / lower remat recompute / triangular attention",
+    "memory": "Pallas flash attention (VMEM-resident score tiles) / wider "
+              "fusion / bf16 intermediates",
+    "collective": "re-layout parallelism (less TP for small models, EP "
+                  "dispatch locality for MoE) / compressed or overlapped "
+                  "collectives",
+}
+
+
+def load(mesh: str = "single", tag: str = "") -> list[dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(RESULTS, mesh, f"*{tag}.json"))):
+        r = json.load(open(f))
+        if r.get("ok") and r.get("tag", "") == tag:
+            rows.append(r)
+    return rows
+
+
+def table(rows: list[dict], md: bool = True) -> str:
+    out = []
+    hdr = ("arch", "shape", "compute_s", "memory_s", "ici_s", "dcn_s",
+           "dominant", "MODEL_FLOPS", "useful", "peak_GiB")
+    if md:
+        out.append("| " + " | ".join(hdr) + " |")
+        out.append("|" + "---|" * len(hdr))
+    else:
+        out.append(",".join(hdr))
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        rf = r["roofline"]
+        cells = (r["arch"], r["shape"], f"{rf['compute_s']:.3f}",
+                 f"{rf['memory_s']:.3f}", f"{rf['collective_s']:.3f}",
+                 f"{rf['dcn_s']:.3f}", rf["dominant"],
+                 f"{rf['model_flops']:.2e}", f"{rf['useful_ratio']:.2f}",
+                 f"{r['memory']['peak_bytes'] / 2**30:.1f}")
+        out.append(("| " + " | ".join(cells) + " |") if md
+                   else ",".join(cells))
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--md", action="store_true", default=True)
+    args = ap.parse_args()
+    rows = load(args.mesh, args.tag)
+    print(table(rows, md=args.md))
+    doms = {}
+    for r in rows:
+        doms.setdefault(r["roofline"]["dominant"], []).append(
+            f"{r['arch']}×{r['shape']}")
+    print()
+    for dom, cells in sorted(doms.items()):
+        print(f"**{dom}-bound** ({len(cells)}): {', '.join(cells)}")
+        print(f"  -> {BOTTLENECK_FIXES[dom]}")
+
+
+if __name__ == "__main__":
+    main()

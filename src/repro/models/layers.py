@@ -1,0 +1,185 @@
+"""Shared model layers: norms, MLPs, embeddings, RoPE, initializers.
+
+Pure-function style: params are plain dict pytrees; each builder returns
+``(init_fn, spec)`` metadata so the sharding layer can derive NamedShardings
+without a framework dependency (no flax/haiku in this container).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.parallel.sharding import logical_constraint
+
+
+# -- initializers -------------------------------------------------------------
+def normal_init(key: jax.Array, shape: tuple[int, ...], std: float,
+                dtype: Any) -> jax.Array:
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * std).astype(dtype)
+
+
+def split_keys(key: jax.Array, n: int) -> list[jax.Array]:
+    return list(jax.random.split(key, n))
+
+
+# -- norms ---------------------------------------------------------------------
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6,
+            offset: bool = False) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    w = scale.astype(jnp.float32)
+    if offset:                     # gemma-style (1 + w)
+        w = 1.0 + w
+    return (y * w).astype(dtype)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mean) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(dtype)
+
+
+def apply_norm(x: jax.Array, params: dict, config: ModelConfig) -> jax.Array:
+    if config.norm == "layernorm":
+        return layernorm(x, params["scale"], params["bias"])
+    return rmsnorm(x, params["scale"], offset=config.norm_offset)
+
+
+def init_norm(config: ModelConfig, dtype: Any) -> tuple[dict, dict]:
+    if config.norm == "layernorm":
+        params = {"scale": jnp.ones((config.d_model,), dtype),
+                  "bias": jnp.zeros((config.d_model,), dtype)}
+        specs = {"scale": ("embed",), "bias": ("embed",)}
+    else:
+        init = jnp.zeros if config.norm_offset else jnp.ones
+        params = {"scale": init((config.d_model,), dtype)}
+        specs = {"scale": ("embed",)}
+    return params, specs
+
+
+# -- activations -----------------------------------------------------------
+def activation(x: jax.Array, kind: str) -> jax.Array:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    if kind == "relu2":             # nemotron / minitron squared ReLU
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(f"unknown activation {kind!r}")
+
+
+# -- dense MLP ---------------------------------------------------------------
+def init_mlp(key: jax.Array, config: ModelConfig, dtype: Any,
+             d_model: int | None = None, d_ff: int | None = None
+             ) -> tuple[dict, dict]:
+    d = d_model or config.d_model
+    f = d_ff or config.d_ff
+    k1, k2, k3 = split_keys(key, 3)
+    std_in = 1.0 / np.sqrt(d)
+    std_out = 1.0 / np.sqrt(f) / np.sqrt(2.0 * config.num_layers)
+    params = {"w_up": normal_init(k1, (d, f), std_in, dtype),
+              "w_down": normal_init(k2, (f, d), std_out, dtype)}
+    specs = {"w_up": ("embed_fsdp", "ff"), "w_down": ("ff", "embed_fsdp")}
+    if config.mlp_gated:
+        params["w_gate"] = normal_init(k3, (d, f), std_in, dtype)
+        specs["w_gate"] = ("embed_fsdp", "ff")
+    return params, specs
+
+
+def mlp(x: jax.Array, params: dict, config: ModelConfig) -> jax.Array:
+    dtype = x.dtype
+    up = x @ params["w_up"].astype(dtype)
+    if config.mlp_gated:
+        gate = activation(x @ params["w_gate"].astype(dtype), config.hidden_act)
+        h = gate * up
+    else:
+        h = activation(up, config.hidden_act)
+    h = logical_constraint(h, "batch", "seq", "ff")
+    return h @ params["w_down"].astype(dtype)
+
+
+# -- embeddings ------------------------------------------------------------
+def init_embedding(key: jax.Array, config: ModelConfig, dtype: Any
+                   ) -> tuple[dict, dict]:
+    k1, k2, k3 = split_keys(key, 3)
+    params = {"tok": normal_init(k1, (config.vocab_size, config.d_model),
+                                 1.0 / np.sqrt(config.d_model), dtype)}
+    specs = {"tok": ("vocab", "embed_fsdp")}
+    if config.pos_embedding == "learned":
+        max_pos = config.max_position or 8192
+        params["pos"] = normal_init(k2, (max_pos, config.d_model), 0.02, dtype)
+        specs["pos"] = ("null", "embed_fsdp")
+    if not config.tie_embeddings:
+        params["lm_head"] = normal_init(
+            k3, (config.d_model, config.vocab_size),
+            1.0 / np.sqrt(config.d_model), dtype)
+        specs["lm_head"] = ("embed_fsdp", "vocab")
+    return params, specs
+
+
+def embed_tokens(tokens: jax.Array, params: dict,
+                 config: ModelConfig) -> jax.Array:
+    x = params["tok"].astype(config.activation_dtype)[tokens]
+    if config.name.startswith("gemma") or config.name.startswith("recurrentgemma"):
+        x = x * jnp.asarray(np.sqrt(config.d_model), x.dtype)
+    return x
+
+
+def lm_logits(x: jax.Array, params: dict, config: ModelConfig) -> jax.Array:
+    if config.tie_embeddings:
+        logits = x @ params["tok"].astype(x.dtype).T
+    else:
+        logits = x @ params["lm_head"].astype(x.dtype)
+    logits = logical_constraint(logits, "batch", "seq", "vocab")
+    if config.logits_soft_cap > 0:
+        cap = config.logits_soft_cap
+        logits = cap * jnp.tanh(logits / cap)
+    return logits
+
+
+# -- RoPE -----------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)                 # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    angles = angles[..., :, None, :]                          # (..., S, 1, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- losses ------------------------------------------------------------------
+def cross_entropy(logits: jax.Array, targets: jax.Array,
+                  mask: jax.Array | None = None,
+                  z_loss: float = 0.0) -> jax.Array:
+    """Token-mean cross entropy in fp32 with optional z-loss."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    target_logit = jnp.take_along_axis(
+        logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - target_logit
+    if z_loss > 0:
+        nll = nll + z_loss * jnp.square(logz)
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

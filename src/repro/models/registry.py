@@ -1,0 +1,33 @@
+"""Model registry: family -> module implementing the model API.
+
+API per family module:
+    init(key, config) -> params
+    param_specs(config) -> logical-axis spec pytree (matches params)
+    loss_and_metrics(params, batch, config) -> (loss, metrics)
+    prefill(params, batch, config, max_len) -> (last_logits, cache)
+    decode_step(params, tokens, cache, config) -> (logits, cache)
+    init_cache(config, batch, max_len) -> cache
+    cache_specs(config) -> logical-axis spec pytree (matches cache)
+"""
+from __future__ import annotations
+
+from types import ModuleType
+
+from repro.configs.base import ModelConfig
+from repro.models import rglru, rwkv6, transformer, whisper
+
+_FAMILIES: dict[str, ModuleType] = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "audio": whisper,
+    "ssm": rwkv6,
+    "hybrid": rglru,
+}
+
+
+def get_model(config: ModelConfig) -> ModuleType:
+    try:
+        return _FAMILIES[config.family]
+    except KeyError:
+        raise ValueError(f"unknown model family {config.family!r}") from None

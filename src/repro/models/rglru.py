@@ -1,0 +1,286 @@
+"""RecurrentGemma: RG-LRU recurrent blocks + local sliding-window attention.
+
+Layer pattern (paper arXiv:2402.19427): cycles ``(rec, rec, attn)`` — two
+gated-linear-recurrence blocks per local-attention block. Every temporal
+block is followed by a GeGLU MLP. The RG-LRU recurrence
+
+    r_t = σ(W_a x_t + b_a)          (recurrence gate)
+    i_t = σ(W_x x_t + b_x)          (input gate)
+    a_t = exp(-c · softplus(Λ) · r_t)           (c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+is a diagonal linear recurrence — evaluated with ``jax.lax.associative_scan``
+(log-depth, TPU-friendly) at train/prefill and O(1) per step at decode. The
+decode state is constant-size (LRU state + 3-tap conv tail + a
+``local_window`` rolling KV buffer), which is why this arch runs the
+``long_500k`` cell.
+
+Layers are *unrolled* (heterogeneous block types); at 26 layers the HLO stays
+small. Params/caches are per-layer dicts keyed ``layer_NN``.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.parallel.sharding import logical_constraint
+
+_C = 8.0  # RG-LRU sharpness constant
+
+
+def layer_kinds(config: ModelConfig) -> list[str]:
+    pat = config.block_pattern
+    return [pat[i % len(pat)] for i in range(config.num_layers)]
+
+
+# -- init ---------------------------------------------------------------------
+def _init_rec_block(key: jax.Array, config: ModelConfig, dtype: Any) -> dict:
+    d, w = config.d_model, config.lru_width or config.d_model
+    ks = L.split_keys(key, 8)
+    std = 1.0 / np.sqrt(d)
+    stdw = 1.0 / np.sqrt(w)
+    return {
+        "w_in_x": L.normal_init(ks[0], (d, w), std, dtype),
+        "w_in_gate": L.normal_init(ks[1], (d, w), std, dtype),
+        "conv_w": L.normal_init(ks[2], (config.conv_width, w), stdw, dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "wa": L.normal_init(ks[3], (w, w), stdw, dtype),
+        "ba": jnp.zeros((w,), jnp.float32),
+        "wx": L.normal_init(ks[4], (w, w), stdw, dtype),
+        "bx": jnp.zeros((w,), jnp.float32),
+        "lam": jnp.asarray(np.linspace(0.3, 1.5, w).astype(np.float32)),
+        "w_out": L.normal_init(
+            ks[5], (w, d), stdw / np.sqrt(2.0 * config.num_layers), dtype),
+    }
+
+
+_REC_SPECS = {
+    "w_in_x": ("embed_fsdp", "lru"), "w_in_gate": ("embed_fsdp", "lru"),
+    "conv_w": ("conv", "lru"), "conv_b": ("lru",),
+    "wa": ("null", "lru"), "ba": ("lru",),
+    "wx": ("null", "lru"), "bx": ("lru",),
+    "lam": ("lru",), "w_out": ("lru", "embed_fsdp"),
+}
+
+
+def init(key: jax.Array, config: ModelConfig) -> dict:
+    dtype = jnp.dtype(config.param_dtype)
+    kinds = layer_kinds(config)
+    keys = L.split_keys(key, config.num_layers + 2)
+    params: dict = {}
+    embed, _ = L.init_embedding(keys[0], config, dtype)
+    params["embed"] = embed
+    for i, kind in enumerate(kinds):
+        k_t, k_m = L.split_keys(keys[i + 1], 2)
+        blk: dict = {}
+        if kind == "rec":
+            blk["rec"] = _init_rec_block(k_t, config, dtype)
+        else:
+            blk["attn"], _ = attn.init_attention(k_t, config, dtype)
+        blk["mlp"], _ = L.init_mlp(k_m, config, dtype)
+        blk["norm1"], _ = L.init_norm(config, dtype)
+        blk["norm2"], _ = L.init_norm(config, dtype)
+        params[f"layer_{i:02d}"] = blk
+    final_norm, _ = L.init_norm(config, dtype)
+    params["final_norm"] = final_norm
+    return params
+
+
+def param_specs(config: ModelConfig) -> dict:
+    embed_s = {"tok": ("vocab", "embed_fsdp")}
+    if not config.tie_embeddings:
+        embed_s["lm_head"] = ("embed_fsdp", "vocab")
+    norm_s = {"scale": ("embed",)}
+    attn_s = {"wq": ("embed_fsdp", "heads"), "wk": ("embed_fsdp", "kv_heads"),
+              "wv": ("embed_fsdp", "kv_heads"), "wo": ("heads", "embed_fsdp")}
+    mlp_s = {"w_up": ("embed_fsdp", "ff"), "w_down": ("ff", "embed_fsdp"),
+             "w_gate": ("embed_fsdp", "ff")}
+    specs: dict = {"embed": embed_s, "final_norm": dict(norm_s)}
+    for i, kind in enumerate(layer_kinds(config)):
+        blk = {"mlp": dict(mlp_s), "norm1": dict(norm_s),
+               "norm2": dict(norm_s)}
+        if kind == "rec":
+            blk["rec"] = dict(_REC_SPECS)
+        else:
+            blk["attn"] = dict(attn_s)
+        specs[f"layer_{i:02d}"] = blk
+    return specs
+
+
+# -- RG-LRU core -----------------------------------------------------------
+def _rg_lru(x: jax.Array, p: dict, h0: jax.Array
+            ) -> tuple[jax.Array, jax.Array]:
+    """x: (B, T, W) -> (y, h_last). Associative scan over time."""
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(x32 @ p["wa"].astype(jnp.float32) + p["ba"])
+    i = jax.nn.sigmoid(x32 @ p["wx"].astype(jnp.float32) + p["bx"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r                  # (B,T,W) ≤ 0
+    a = jnp.exp(log_a)
+    gated = i * x32
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated
+
+    # h_t = a_t h_{t-1} + b_t, seeded with h0: fold h0 into b_1
+    b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(dtype), h[:, -1]
+
+
+def _rg_lru_step(x: jax.Array, p: dict, h0: jax.Array
+                 ) -> tuple[jax.Array, jax.Array]:
+    """One token: x (B, W)."""
+    x32 = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(x32 @ p["wa"].astype(jnp.float32) + p["ba"])
+    i = jax.nn.sigmoid(x32 @ p["wx"].astype(jnp.float32) + p["bx"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    h = a * h0 + jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * x32)
+    return h.astype(x.dtype), h
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 tail: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv; x: (B,T,W), w: (cw, W), tail: (B, cw-1, W)."""
+    cw = w.shape[0]
+    xt = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    y = sum(xt[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+            for i in range(cw))
+    new_tail = xt[:, xt.shape[1] - (cw - 1):]
+    return y + b.astype(x.dtype), new_tail
+
+
+def _rec_block(x: jax.Array, p: dict, state: dict
+               ) -> tuple[jax.Array, dict]:
+    dtype = x.dtype
+    gate = jax.nn.gelu(x @ p["w_in_gate"].astype(dtype))
+    h = x @ p["w_in_x"].astype(dtype)
+    h = logical_constraint(h, "batch", "seq", "lru")
+    h, conv_tail = _causal_conv(h, p["conv_w"], p["conv_b"], state["conv"])
+    if x.shape[1] == 1:
+        y, h_last = _rg_lru_step(h[:, 0], p, state["h"])
+        y = y[:, None]
+    else:
+        y, h_last = _rg_lru(h, p, state["h"])
+    out = (y * gate) @ p["w_out"].astype(dtype)
+    return out, {"h": h_last.astype(jnp.float32), "conv": conv_tail}
+
+
+# -- model ------------------------------------------------------------------
+def _forward(params: dict, tokens: jax.Array, config: ModelConfig,
+             cache: dict | None, start_pos) -> tuple[jax.Array, dict | None]:
+    B, S = tokens.shape
+    x = L.embed_tokens(tokens, params["embed"], config)
+    positions = start_pos + jnp.broadcast_to(jnp.arange(S), (B, S))
+    x = logical_constraint(x, "batch", "act_seq", "embed")
+    new_cache: dict | None = None if cache is None else {"pos": cache["pos"] + S}
+    w_lru = config.lru_width or config.d_model
+    cw = config.conv_width
+
+    for i, kind in enumerate(layer_kinds(config)):
+        key = f"layer_{i:02d}"
+
+        def run_layer(x, p, layer_cache, kind=kind):
+            h = L.apply_norm(x, p["norm1"], config)
+            if kind == "rec":
+                if layer_cache is None:
+                    state = {"h": jnp.zeros((B, w_lru), jnp.float32),
+                             "conv": jnp.zeros((B, cw - 1, w_lru), x.dtype)}
+                    a, nc = _rec_block(h, p["rec"], state)
+                    nc = None
+                else:
+                    a, nc = _rec_block(h, p["rec"], layer_cache)
+            else:
+                lc = None if layer_cache is None else \
+                    {**layer_cache, "pos": cache["pos"]}
+                a, nc = attn.attention_layer(h, p["attn"], config, positions,
+                                             cache=lc,
+                                             window=config.local_window)
+                if nc is not None:
+                    nc = {"k": nc["k"], "v": nc["v"]}
+            x = x + a
+            h = L.apply_norm(x, p["norm2"], config)
+            x = x + L.mlp(h, p["mlp"], config)
+            x = logical_constraint(x, "batch", "act_seq", "embed")
+            return x, nc
+
+        if config.remat != "none":
+            run_layer = jax.checkpoint(run_layer)
+        x, nc = run_layer(x, params[key],
+                          None if cache is None else cache[key])
+        if cache is not None:
+            new_cache[key] = nc
+    x = L.apply_norm(x, params["final_norm"], config)
+    return x, new_cache
+
+
+def init_cache(config: ModelConfig, batch: int, max_len: int) -> dict:
+    w_lru = config.lru_width or config.d_model
+    cw = config.conv_width
+    window = config.local_window
+    size = min(window, max_len) if window > 0 else max_len
+    kh, hd = config.num_kv_heads, config.resolved_head_dim
+    dtype = config.activation_dtype
+    cache: dict = {"pos": jnp.zeros((), jnp.int32)}
+    for i, kind in enumerate(layer_kinds(config)):
+        if kind == "rec":
+            cache[f"layer_{i:02d}"] = {
+                "h": jnp.zeros((batch, w_lru), jnp.float32),
+                "conv": jnp.zeros((batch, cw - 1, w_lru), dtype)}
+        else:
+            cache[f"layer_{i:02d}"] = {
+                "k": jnp.zeros((batch, size, kh, hd), dtype),
+                "v": jnp.zeros((batch, size, kh, hd), dtype)}
+    return cache
+
+
+def cache_specs(config: ModelConfig) -> dict:
+    specs: dict = {"pos": ()}
+    for i, kind in enumerate(layer_kinds(config)):
+        if kind == "rec":
+            specs[f"layer_{i:02d}"] = {"h": ("batch", "lru"),
+                                       "conv": ("batch", "conv", "lru")}
+        else:
+            specs[f"layer_{i:02d}"] = {
+                "k": ("batch", "null", "kv_heads", "head_dim"),
+                "v": ("batch", "null", "kv_heads", "head_dim")}
+    return specs
+
+
+def loss_and_metrics(params: dict, batch: dict, config: ModelConfig
+                     ) -> tuple[jax.Array, dict]:
+    from repro.models.transformer import _chunked_ce
+    tokens = batch["tokens"]
+    x, _ = _forward(params, tokens, config, None, 0)
+    targets = tokens[:, 1:]
+    mask = batch.get("loss_mask")
+    mask = jnp.ones(targets.shape, jnp.float32) if mask is None else mask[:, 1:]
+    loss = _chunked_ce(x[:, :-1], params, config, targets, mask)
+    return loss, {"loss": loss, "aux_loss": jnp.zeros((), jnp.float32)}
+
+
+def prefill(params: dict, batch: dict, config: ModelConfig,
+            max_len: int | None = None) -> tuple[jax.Array, dict]:
+    tokens = batch["tokens"]
+    cache = init_cache(config, tokens.shape[0], max_len or tokens.shape[1])
+    x, cache = _forward(params, tokens, config, cache, 0)
+    logits = L.lm_logits(x[:, -1:], params["embed"], config)
+    return logits, cache
+
+
+def decode_step(params: dict, tokens: jax.Array, cache: dict,
+                config: ModelConfig) -> tuple[jax.Array, dict]:
+    x, cache = _forward(params, tokens, config, cache, cache["pos"])
+    logits = L.lm_logits(x, params["embed"], config)
+    return logits, cache

@@ -1,0 +1,314 @@
+"""RWKV-6 "Finch" — attention-free LM with data-dependent decay.
+
+Recurrence per head (K = V = head_dim):
+
+    y_t = r_t^T S_{t-1}  +  (r_t · (u ⊙ k_t)) v_t
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T,   w_t = exp(-exp(w0 + LoRA(x_t)))
+
+Three evaluation modes, all the same math (tested against each other):
+  * ``recurrent`` — lax.scan over time (exact; decode + oracle);
+  * ``chunked``   — the training/prefill path: per-chunk cumulative log-decay;
+    inter-chunk contributions are (C×K)·(K×V) MXU matmuls and intra-chunk
+    pairwise terms use log-space *differences* (always ≤ 0, so exp never
+    overflows even with near-zero decay — the numerically safe TPU port of
+    the CUDA wkv kernel, see DESIGN.md);
+  * decode — O(1) state update per token; the ``long_500k`` shape runs with a
+    constant-size state (no KV cache), which is why this arch keeps that cell.
+
+Faithfulness notes: token-shift mixing uses learned per-channel lerp (the
+projection-specific ddlerp LoRA of the reference implementation is reduced to
+its dominant term); the decay LoRA — Finch's signature data dependence — is
+kept in full. Channel mixing is the reference squared-ReLU form.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.parallel.sharding import logical_constraint
+
+NEG_INF = -1e30
+
+
+# -- init -----------------------------------------------------------------------
+def _init_block(key: jax.Array, config: ModelConfig, dtype: Any) -> dict:
+    d, f, dl = config.d_model, config.d_ff, config.decay_lora
+    ks = L.split_keys(key, 12)
+    std = 1.0 / np.sqrt(d)
+    std_o = std / np.sqrt(2.0 * config.num_layers)
+    p = {
+        # time mixing
+        "mu": jnp.full((5, d), 0.5, dtype),            # r,k,v,w,g lerp factors
+        "w_r": L.normal_init(ks[0], (d, d), std, dtype),
+        "w_k": L.normal_init(ks[1], (d, d), std, dtype),
+        "w_v": L.normal_init(ks[2], (d, d), std, dtype),
+        "w_g": L.normal_init(ks[3], (d, d), std, dtype),
+        "w_o": L.normal_init(ks[4], (d, d), std_o, dtype),
+        "w0": jnp.asarray(
+            np.linspace(-6.0, -0.5, d).astype(np.float32)),   # decay bias
+        "w_lora_a": L.normal_init(ks[5], (d, dl), std, dtype),
+        "w_lora_b": L.normal_init(ks[6], (dl, d), 1e-2, dtype),
+        "u": L.normal_init(ks[7], (d,), 0.5, jnp.float32),    # bonus
+        "ln_x_scale": jnp.ones((d,), dtype),
+        "ln_x_bias": jnp.zeros((d,), dtype),
+        # channel mixing
+        "cmu": jnp.full((2, d), 0.5, dtype),                  # k, r
+        "w_ck": L.normal_init(ks[8], (d, f), std, dtype),
+        "w_cv": L.normal_init(ks[9], (f, d), std_o, dtype),
+        "w_cr": L.normal_init(ks[10], (d, d), std, dtype),
+    }
+    n1, _ = L.init_norm(config, dtype)
+    n2, _ = L.init_norm(config, dtype)
+    p["norm1"], p["norm2"] = n1, n2
+    return p
+
+
+def _block_specs(config: ModelConfig) -> dict:
+    norm_s = ({"scale": ("embed",), "bias": ("embed",)}
+              if config.norm == "layernorm" else {"scale": ("embed",)})
+    return {
+        "mu": ("null", "embed"), "w_r": ("embed_fsdp", "heads"),
+        "w_k": ("embed_fsdp", "heads"), "w_v": ("embed_fsdp", "heads"),
+        "w_g": ("embed_fsdp", "heads"), "w_o": ("heads", "embed_fsdp"),
+        "w0": ("heads",), "w_lora_a": ("embed_fsdp", "null"),
+        "w_lora_b": ("null", "heads"), "u": ("heads",),
+        "ln_x_scale": ("embed",), "ln_x_bias": ("embed",),
+        "cmu": ("null", "embed"), "w_ck": ("embed_fsdp", "ff"),
+        "w_cv": ("ff", "embed_fsdp"), "w_cr": ("embed_fsdp", "null"),
+        "norm1": dict(norm_s), "norm2": dict(norm_s),
+    }
+
+
+def init(key: jax.Array, config: ModelConfig) -> dict:
+    dtype = jnp.dtype(config.param_dtype)
+    k_e, k_l, k_f = L.split_keys(key, 3)
+    embed, _ = L.init_embedding(k_e, config, dtype)
+    layers = jax.vmap(lambda k: _init_block(k, config, dtype))(
+        jax.random.split(k_l, config.num_layers))
+    final_norm, _ = L.init_norm(config, dtype)
+    return {"embed": embed, "layers": layers, "final_norm": final_norm}
+
+
+def param_specs(config: ModelConfig) -> dict:
+    embed_s = {"tok": ("vocab", "embed_fsdp")}
+    if not config.tie_embeddings:
+        embed_s["lm_head"] = ("embed_fsdp", "vocab")
+    block = jax.tree_util.tree_map(
+        lambda axes: ("layers",) + axes, _block_specs(config),
+        is_leaf=lambda x: isinstance(x, tuple))
+    final_s = ({"scale": ("embed",), "bias": ("embed",)}
+               if config.norm == "layernorm" else {"scale": ("embed",)})
+    return {"embed": embed_s, "layers": block, "final_norm": final_s}
+
+
+# -- wkv cores -------------------------------------------------------------------
+def _wkv_chunked(r, k, v, logw, u, state, chunk: int):
+    """r,k,v,logw: (B, T, H, K) fp32; u: (H, K); state: (B, H, K, V).
+    Returns (y (B,T,H,V), final_state)."""
+    B, T, H, K = r.shape
+    C = min(chunk, T)
+    n = -(-T // C)
+    pad = n * C - T
+    if pad:
+        z = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r, k, v = jnp.pad(r, z), jnp.pad(k, z), jnp.pad(v, z)
+        logw = jnp.pad(logw, z)   # log w = 0 -> w = 1 keeps state intact
+
+    def reshape(x):
+        return x.reshape(B, n, C, H, K).transpose(1, 0, 2, 3, 4)
+
+    rb, kb, vb, lwb = map(reshape, (r, k, v, logw))
+
+    tri = jnp.tril(jnp.ones((C, C), bool), k=-1)              # s < t
+
+    def chunk_step(S, xs):
+        rc, kc, vc, lwc = xs                                   # (B, C, H, K)
+        la = jnp.cumsum(lwc, axis=1)                           # inclusive
+        la_prev = la - lwc                                     # exclusive
+        # inter-chunk: y += (r ⊙ e^{la_prev}) S
+        r_dec = rc * jnp.exp(la_prev)
+        y_inter = jnp.einsum("bthk,bhkv->bthv", r_dec, S)
+        # intra-chunk pairwise log-space differences (≤ 0 ⇒ exp safe)
+        diff = la_prev[:, :, None] - la[:, None, :]            # (B,Ct,Cs,H,K)
+        coef = jnp.where(tri[None, :, :, None, None], jnp.exp(diff), 0.0)
+        eye = jnp.eye(C, dtype=coef.dtype)
+        coef = coef + eye[None, :, :, None, None] * u[None, None, None]
+        scores = jnp.einsum("bthk,bshk,btshk->btsh", rc, kc, coef)
+        y_intra = jnp.einsum("btsh,bshv->bthv", scores, vc)
+        # state to chunk end
+        g = jnp.exp(la[:, -1:] - la)                           # (B,C,H,K) ≤ 1
+        S_new = (jnp.exp(la[:, -1])[..., None] * S
+                 + jnp.einsum("bshk,bshv->bhkv", kc * g, vc))
+        return S_new, y_inter + y_intra
+
+    state, yb = jax.lax.scan(chunk_step, state, (rb, kb, vb, lwb))
+    y = yb.transpose(1, 0, 2, 3, 4).reshape(B, n * C, H, K)
+    return y[:, :T], state
+
+
+def _wkv_recurrent(r, k, v, logw, u, state):
+    """Exact sequential scan (oracle / tiny shapes)."""
+    def step(S, xs):
+        rt, kt, vt, lwt = xs                                   # (B, H, K)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, S) + \
+            jnp.einsum("bhk,hk,bhk,bhv->bhv", rt, u, kt, vt)
+        S = jnp.exp(lwt)[..., None] * S + kt[..., None] * vt[..., None, :]
+        return S, y
+
+    xs = jax.tree_util.tree_map(lambda x: x.swapaxes(0, 1), (r, k, v, logw))
+    state, y = jax.lax.scan(step, state, xs)
+    return y.swapaxes(0, 1), state
+
+
+def _wkv_step(r, k, v, logw, u, state):
+    """One decode token: r,k,v,logw (B, H, K)."""
+    y = jnp.einsum("bhk,bhkv->bhv", r, state) + \
+        jnp.einsum("bhk,hk,bhk,bhv->bhv", r, u, k, v)
+    state = jnp.exp(logw)[..., None] * state + \
+        k[..., None] * v[..., None, :]
+    return y, state
+
+
+# -- block -----------------------------------------------------------------------
+def _token_shift(x: jax.Array, prev: jax.Array) -> jax.Array:
+    """xs[t] = x[t-1]; xs[0] = prev (carried across chunks/steps)."""
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def _time_mix(x, xs, p, config: ModelConfig, state, mode: str):
+    B, T, D = x.shape
+    H = config.num_heads
+    K = config.resolved_head_dim
+    dtype = x.dtype
+    mu = p["mu"].astype(dtype)
+    xr, xk, xv, xw, xg = (x + (xs - x) * mu[i] for i in range(5))
+    r = (xr @ p["w_r"].astype(dtype)).reshape(B, T, H, K).astype(jnp.float32)
+    k = (xk @ p["w_k"].astype(dtype)).reshape(B, T, H, K).astype(jnp.float32)
+    v = (xv @ p["w_v"].astype(dtype)).reshape(B, T, H, K).astype(jnp.float32)
+    g = xg @ p["w_g"].astype(dtype)
+    # data-dependent decay (Finch): logw = -exp(w0 + tanh(x A) B) ≤ 0
+    lora = jnp.tanh(xw @ p["w_lora_a"].astype(dtype)) @ p["w_lora_b"].astype(dtype)
+    logw = -jnp.exp(p["w0"].astype(jnp.float32)
+                    + lora.astype(jnp.float32)).reshape(B, T, H, K)
+    r = logical_constraint(r, "batch", "seq", "heads", "head_dim")
+    k = logical_constraint(k, "batch", "seq", "heads", "head_dim")
+    u = p["u"].astype(jnp.float32).reshape(H, K)
+
+    if mode == "chunked":
+        y, state = _wkv_chunked(r, k, v, logw, u, state, config.rwkv_chunk)
+    elif mode == "recurrent":
+        y, state = _wkv_recurrent(r, k, v, logw, u, state)
+    else:  # decode: T == 1
+        y, state = _wkv_step(r[:, 0], k[:, 0], v[:, 0], logw[:, 0], u, state)
+        y = y[:, None]
+    # per-head groupnorm, gate, project out
+    mean = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    yn = (y - mean) * jax.lax.rsqrt(var + 64e-5)
+    yn = yn.reshape(B, T, D).astype(dtype)
+    yn = yn * p["ln_x_scale"].astype(dtype) + p["ln_x_bias"].astype(dtype)
+    out = (yn * jax.nn.silu(g)) @ p["w_o"].astype(dtype)
+    return out, state
+
+
+def _channel_mix(x, xs, p, config: ModelConfig):
+    dtype = x.dtype
+    cmu = p["cmu"].astype(dtype)
+    xk = x + (xs - x) * cmu[0]
+    xr = x + (xs - x) * cmu[1]
+    kk = jax.nn.relu(xk @ p["w_ck"].astype(dtype))
+    kk = kk * kk
+    kk = logical_constraint(kk, "batch", "seq", "ff")
+    return jax.nn.sigmoid(xr @ p["w_cr"].astype(dtype)) * (kk @ p["w_cv"].astype(dtype))
+
+
+def _block(x, p, config: ModelConfig, state: dict, mode: str):
+    h = L.apply_norm(x, p["norm1"], config)
+    xs = _token_shift(h, state["tshift"])
+    new_tshift = h[:, -1]
+    a, S = _time_mix(h, xs, p, config, state["S"], mode)
+    x = x + a
+    x = logical_constraint(x, "batch", "act_seq", "embed")
+    h = L.apply_norm(x, p["norm2"], config)
+    xs = _token_shift(h, state["cshift"])
+    new_cshift = h[:, -1]
+    x = x + _channel_mix(h, xs, p, config)
+    x = logical_constraint(x, "batch", "act_seq", "embed")
+    return x, {"S": S, "tshift": new_tshift, "cshift": new_cshift}
+
+
+# -- model API ---------------------------------------------------------------
+def init_state(config: ModelConfig, batch: int) -> dict:
+    H, K = config.num_heads, config.resolved_head_dim
+    Lc, D = config.num_layers, config.d_model
+    return {"S": jnp.zeros((Lc, batch, H, K, K), jnp.float32),
+            "tshift": jnp.zeros((Lc, batch, D), config.activation_dtype),
+            "cshift": jnp.zeros((Lc, batch, D), config.activation_dtype),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def cache_specs(config: ModelConfig) -> dict:
+    return {"S": ("layers", "batch", "heads", "null", "null"),
+            "tshift": ("layers", "batch", "embed"),
+            "cshift": ("layers", "batch", "embed"),
+            "pos": ()}
+
+
+init_cache = lambda config, batch, max_len=0: init_state(config, batch)
+
+
+def _run(params: dict, tokens: jax.Array, config: ModelConfig,
+         state: dict, mode: str) -> tuple[jax.Array, dict]:
+    x = L.embed_tokens(tokens, params["embed"], config)
+    x = logical_constraint(x, "batch", "act_seq", "embed")
+
+    def body(carry, xs):
+        x = carry
+        p, S, ts, cs = xs
+        x, ns = _block(x, p, config, {"S": S, "tshift": ts, "cshift": cs},
+                       mode)
+        return x, (ns["S"], ns["tshift"], ns["cshift"])
+
+    if config.remat != "none":
+        body = jax.checkpoint(body)
+    x, (S, ts, cs) = jax.lax.scan(
+        body, x, (params["layers"], state["S"], state["tshift"],
+                  state["cshift"]))
+    x = L.apply_norm(x, params["final_norm"], config)
+    new_state = {"S": S, "tshift": ts, "cshift": cs,
+                 "pos": state["pos"] + tokens.shape[1]}
+    return x, new_state
+
+
+def loss_and_metrics(params: dict, batch: dict, config: ModelConfig
+                     ) -> tuple[jax.Array, dict]:
+    from repro.models.transformer import _chunked_ce
+    tokens = batch["tokens"]
+    state = init_state(config, tokens.shape[0])
+    x, _ = _run(params, tokens, config, state, mode="chunked")
+    targets = tokens[:, 1:]
+    mask = batch.get("loss_mask")
+    mask = jnp.ones(targets.shape, jnp.float32) if mask is None else mask[:, 1:]
+    loss = _chunked_ce(x[:, :-1], params, config, targets, mask)
+    return loss, {"loss": loss, "aux_loss": jnp.zeros((), jnp.float32)}
+
+
+def prefill(params: dict, batch: dict, config: ModelConfig,
+            max_len: int | None = None) -> tuple[jax.Array, dict]:
+    tokens = batch["tokens"]
+    state = init_state(config, tokens.shape[0])
+    x, state = _run(params, tokens, config, state, mode="chunked")
+    logits = L.lm_logits(x[:, -1:], params["embed"], config)
+    return logits, state
+
+
+def decode_step(params: dict, tokens: jax.Array, cache: dict,
+                config: ModelConfig) -> tuple[jax.Array, dict]:
+    x, cache = _run(params, tokens, config, cache, mode="decode")
+    logits = L.lm_logits(x, params["embed"], config)
+    return logits, cache

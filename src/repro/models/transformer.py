@@ -1,0 +1,293 @@
+"""Decoder-only transformer LM: dense / MoE / VLM families.
+
+Production-shape choices:
+  * layers scanned over a stacked (L, ...) param pytree (small HLO, fast
+    compile even for the 61-layer 1T MoE);
+  * remat policies: none | dots | full (jax.checkpoint around the scanned
+    block);
+  * chunked cross-entropy: the (B, S, 256k-vocab) logits tensor is never
+    materialized — the loss scans over sequence chunks and remats the
+    lm-head matmul in the backward pass (memory <-> flops trade recorded in
+    §Perf);
+  * serve path: ``prefill`` returns last-token logits + a filled KV cache,
+    ``decode_step`` appends one token (rolling-buffer for window attention).
+
+VLM (llava-family): precomputed image patch embeddings (the stubbed anyres
+frontend) are prepended to token embeddings; loss masks image positions.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.parallel.sharding import logical_constraint
+
+
+# -- init ------------------------------------------------------------------
+def _init_block(key: jax.Array, config: ModelConfig, dtype: Any) -> dict:
+    k_attn, k_mlp, k_n1, k_n2 = L.split_keys(key, 4)
+    params = {}
+    params["attn"], _ = attn.init_attention(k_attn, config, dtype)
+    if config.num_experts > 0:
+        params["moe"], _ = moe_lib.init_moe(k_mlp, config, dtype)
+    else:
+        params["mlp"], _ = L.init_mlp(k_mlp, config, dtype)
+    params["norm1"], _ = L.init_norm(config, dtype)
+    params["norm2"], _ = L.init_norm(config, dtype)
+    return params
+
+
+def _block_specs(config: ModelConfig) -> dict:
+    attn_s = {"wq": ("embed_fsdp", "heads"),
+              "wk": ("embed_fsdp", "kv_heads"),
+              "wv": ("embed_fsdp", "kv_heads"),
+              "wo": ("heads", "embed_fsdp")}
+    specs: dict = {"attn": attn_s}
+    if config.num_experts > 0:
+        ax = ("experts_a2a" if config.sharding_overrides.get("_moe_impl")
+              == "a2a" else "experts")
+        in_ax = "null" if ax == "experts_a2a" else "expert_in"
+        specs["moe"] = {"router": ("embed", "null"),
+                        "w_gate": (ax, in_ax, "ff"),
+                        "w_up": (ax, in_ax, "ff"),
+                        "w_down": (ax, "ff", in_ax)}
+    else:
+        mlp_s = {"w_up": ("embed_fsdp", "ff"), "w_down": ("ff", "embed_fsdp")}
+        if config.mlp_gated:
+            mlp_s["w_gate"] = ("embed_fsdp", "ff")
+        specs["mlp"] = mlp_s
+    norm_s = ({"scale": ("embed",), "bias": ("embed",)}
+              if config.norm == "layernorm" else {"scale": ("embed",)})
+    specs["norm1"] = dict(norm_s)
+    specs["norm2"] = dict(norm_s)
+    return specs
+
+
+def init(key: jax.Array, config: ModelConfig) -> dict:
+    dtype = jnp.dtype(config.param_dtype)
+    k_embed, k_layers, k_final = L.split_keys(key, 3)
+    embed, _ = L.init_embedding(k_embed, config, dtype)
+    layer_keys = jax.random.split(k_layers, config.num_layers)
+    layers = jax.vmap(lambda k: _init_block(k, config, dtype))(layer_keys)
+    final_norm, _ = L.init_norm(config, dtype)
+    return {"embed": embed, "layers": layers, "final_norm": final_norm}
+
+
+def param_specs(config: ModelConfig) -> dict:
+    embed_s = {"tok": ("vocab", "embed_fsdp")}
+    if config.pos_embedding == "learned":
+        embed_s["pos"] = ("null", "embed_fsdp")
+    if not config.tie_embeddings:
+        embed_s["lm_head"] = ("embed_fsdp", "vocab")
+    block = _block_specs(config)
+    layers = jax.tree_util.tree_map(
+        lambda axes: ("layers",) + axes, block,
+        is_leaf=lambda x: isinstance(x, tuple))
+    final_s = ({"scale": ("embed",), "bias": ("embed",)}
+               if config.norm == "layernorm" else {"scale": ("embed",)})
+    return {"embed": embed_s, "layers": layers, "final_norm": final_s}
+
+
+# -- one transformer block -----------------------------------------------------
+def _block(x: jax.Array, block_params: dict, config: ModelConfig,
+           positions: jax.Array, cache: dict | None
+           ) -> tuple[jax.Array, jax.Array, dict | None]:
+    h = L.apply_norm(x, block_params["norm1"], config)
+    a, new_cache = attn.attention_layer(h, block_params["attn"], config,
+                                        positions, cache=cache)
+    x = x + a
+    x = logical_constraint(x, "batch", "act_seq", "embed")
+    h = L.apply_norm(x, block_params["norm2"], config)
+    if config.num_experts > 0:
+        if config.sharding_overrides.get("_moe_impl") == "a2a":
+            m, aux = moe_lib.moe_layer_a2a(h, block_params["moe"], config)
+        else:
+            m, aux = moe_lib.moe_layer(h, block_params["moe"], config)
+    else:
+        m, aux = L.mlp(h, block_params["mlp"], config), jnp.zeros((), jnp.float32)
+    x = x + m
+    x = logical_constraint(x, "batch", "act_seq", "embed")
+    return x, aux, new_cache
+
+
+def _remat(fn, config: ModelConfig):
+    if config.remat == "none":
+        return fn
+    if config.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def _run_layers(x: jax.Array, params: dict, config: ModelConfig,
+                positions: jax.Array, cache: dict | None
+                ) -> tuple[jax.Array, jax.Array, dict | None]:
+    """Scan (or unroll) the stacked blocks; threads per-layer cache slices."""
+    layers = params["layers"]
+    pos_scalar = None if cache is None else cache["pos"]
+
+    if config.scan_layers:
+        def body(carry, xs):
+            x, aux = carry
+            if cache is None:
+                block_params = xs
+                layer_cache = None
+            else:
+                block_params, ck, cv = xs
+                layer_cache = {"k": ck, "v": cv, "pos": pos_scalar}
+            x, aux_i, new_cache = _block(x, block_params, config,
+                                         positions, layer_cache)
+            ys = (new_cache["k"], new_cache["v"]) if cache is not None else None
+            return (x, aux + aux_i), ys
+
+        body = _remat(body, config)
+        xs = layers if cache is None else (layers, cache["k"], cache["v"])
+        (x, aux), ys = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
+        new_cache = None
+        if cache is not None:
+            new_cache = {"k": ys[0], "v": ys[1],
+                         "pos": pos_scalar + positions.shape[1]}
+        return x, aux, new_cache
+
+    aux = jnp.zeros((), jnp.float32)
+    new_k, new_v = [], []
+    for i in range(config.num_layers):
+        block_params = jax.tree_util.tree_map(lambda p: p[i], layers)
+        layer_cache = None
+        if cache is not None:
+            layer_cache = {"k": cache["k"][i], "v": cache["v"][i],
+                           "pos": pos_scalar}
+        x, aux_i, nc = _block(x, block_params, config, positions, layer_cache)
+        aux = aux + aux_i
+        if nc is not None:
+            new_k.append(nc["k"])
+            new_v.append(nc["v"])
+    new_cache = None
+    if cache is not None:
+        new_cache = {"k": jnp.stack(new_k), "v": jnp.stack(new_v),
+                     "pos": pos_scalar + positions.shape[1]}
+    return x, aux, new_cache
+
+
+# -- input embedding (dense + vlm) ------------------------------------------
+def _embed_inputs(params: dict, batch: dict, config: ModelConfig,
+                  start_pos: jax.Array | int = 0
+                  ) -> tuple[jax.Array, jax.Array]:
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    x = L.embed_tokens(tokens, params["embed"], config)
+    if config.family == "vlm" and "image_embeds" in batch:
+        img = batch["image_embeds"].astype(x.dtype)
+        x = jnp.concatenate([img, x], axis=1)
+    S = x.shape[1]
+    positions = start_pos + jnp.broadcast_to(jnp.arange(S), (B, S))
+    if config.pos_embedding == "learned":
+        x = x + params["embed"]["pos"].astype(x.dtype)[positions]
+    x = logical_constraint(x, "batch", "act_seq", "embed")
+    return x, positions
+
+
+# -- losses ---------------------------------------------------------------------
+def _chunked_ce(x: jax.Array, params: dict, config: ModelConfig,
+                targets: jax.Array, mask: jax.Array,
+                chunk: int = 128) -> jax.Array:
+    """Cross-entropy without materializing (B, S, V): scan over seq chunks,
+    remat the lm-head matmul inside each chunk."""
+    B, S, D = x.shape
+    n = -(-S // chunk)
+    pad = n * chunk - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    xb = x.reshape(B, n, chunk, D).transpose(1, 0, 2, 3)
+    tb = targets.reshape(B, n, chunk).transpose(1, 0, 2)
+    mb = mask.reshape(B, n, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def chunk_fn(carry, xs):
+        xc, tc, mc = xs
+        logits = L.lm_logits(xc, params["embed"], config)
+        logits = logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        tl = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        nll = (logz - tl) * mc.astype(jnp.float32)
+        loss_sum, mask_sum = carry
+        return (loss_sum + jnp.sum(nll),
+                mask_sum + jnp.sum(mc.astype(jnp.float32))), None
+
+    (loss_sum, mask_sum), _ = jax.lax.scan(
+        chunk_fn, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (xb, tb, mb))
+    return loss_sum / jnp.maximum(mask_sum, 1.0)
+
+
+def loss_and_metrics(params: dict, batch: dict, config: ModelConfig
+                     ) -> tuple[jax.Array, dict]:
+    tokens = batch["tokens"]
+    x, positions = _embed_inputs(params, batch, config)
+    x, aux, _ = _run_layers(x, params, config, positions, None)
+    x = L.apply_norm(x, params["final_norm"], config)
+
+    n_img = x.shape[1] - tokens.shape[1]          # 0 unless vlm
+    # positions n_img + t predict token t+1
+    pred = x[:, n_img:-1] if n_img == 0 else x[:, n_img - 1:-1]
+    targets = tokens[:, 1:] if n_img == 0 else tokens
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones(targets.shape, jnp.float32)
+    else:
+        mask = mask[:, 1:] if n_img == 0 else mask
+    loss = _chunked_ce(pred, params, config, targets, mask)
+    total = loss + aux
+    return total, {"loss": loss, "aux_loss": aux}
+
+
+# -- serving -------------------------------------------------------------------
+def init_cache(config: ModelConfig, batch: int, max_len: int) -> dict:
+    window = config.local_window
+    size = min(window, max_len) if window > 0 else max_len
+    kh, hd = config.num_kv_heads, config.resolved_head_dim
+    dtype = config.activation_dtype
+    Lc = config.num_layers
+    return {"k": jnp.zeros((Lc, batch, size, kh, hd), dtype),
+            "v": jnp.zeros((Lc, batch, size, kh, hd), dtype),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def cache_specs(config: ModelConfig) -> dict:
+    kv = ("layers", "batch", "null", "kv_heads", "head_dim")
+    return {"k": kv, "v": kv, "pos": ()}
+
+
+def prefill(params: dict, batch: dict, config: ModelConfig,
+            max_len: int | None = None) -> tuple[jax.Array, dict]:
+    """Run the full prompt, fill the cache, return last-token logits."""
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    x, positions = _embed_inputs(params, batch, config)
+    S_total = x.shape[1]
+    cache = init_cache(config, B, max_len or S_total)
+    x, _, cache = _run_layers(x, params, config, positions, cache)
+    x = L.apply_norm(x, params["final_norm"], config)
+    logits = L.lm_logits(x[:, -1:], params["embed"], config)
+    return logits, cache
+
+
+def decode_step(params: dict, tokens: jax.Array, cache: dict,
+                config: ModelConfig) -> tuple[jax.Array, dict]:
+    """tokens: (B, 1) -> (logits (B,1,V), updated cache)."""
+    x, positions = _embed_inputs(params, {"tokens": tokens}, config,
+                                 start_pos=cache["pos"])
+    x, _, cache = _run_layers(x, params, config, positions, cache)
+    x = L.apply_norm(x, params["final_norm"], config)
+    logits = L.lm_logits(x, params["embed"], config)
+    return logits, cache

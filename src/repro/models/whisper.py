@@ -1,0 +1,230 @@
+"""Whisper-style encoder-decoder (audio family).
+
+The conv frontend is a STUB per the assignment: ``input_specs()`` provides
+precomputed frame embeddings (B, encoder_seq, d_model) — the transformer
+backbone (24 enc + 24 dec layers for medium) is what the cells exercise.
+
+Structure: pre-LN everywhere (LayerNorm), non-gated GELU MLPs, MHA
+(num_kv_heads == num_heads), learned positional embeddings on the decoder
+(and encoder frames; the reference sinusoidal encoder table is replaced by a
+learned one of the same shape — noted in DESIGN.md). Decoder layers carry
+self-attention (causal, cached at decode) + cross-attention over the encoder
+output (K/V computed once at prefill and reused every decode step).
+``long_500k`` is skipped (full attention); decode shapes are valid
+(enc-dec has a decoder).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.parallel.sharding import logical_constraint
+
+
+# -- init -----------------------------------------------------------------------
+def _init_enc_block(key: jax.Array, config: ModelConfig, dtype: Any) -> dict:
+    k1, k2 = L.split_keys(key, 2)
+    p = {}
+    p["attn"], _ = attn.init_attention(k1, config, dtype)
+    p["mlp"], _ = L.init_mlp(k2, config, dtype)
+    p["norm1"], _ = L.init_norm(config, dtype)
+    p["norm2"], _ = L.init_norm(config, dtype)
+    return p
+
+
+def _init_dec_block(key: jax.Array, config: ModelConfig, dtype: Any) -> dict:
+    k1, k2, k3 = L.split_keys(key, 3)
+    p = {}
+    p["self_attn"], _ = attn.init_attention(k1, config, dtype)
+    p["cross_attn"], _ = attn.init_attention(k2, config, dtype)
+    p["mlp"], _ = L.init_mlp(k3, config, dtype)
+    p["norm1"], _ = L.init_norm(config, dtype)
+    p["norm2"], _ = L.init_norm(config, dtype)
+    p["norm3"], _ = L.init_norm(config, dtype)
+    return p
+
+
+def init(key: jax.Array, config: ModelConfig) -> dict:
+    dtype = jnp.dtype(config.param_dtype)
+    k_e, k_enc, k_dec, k_p = L.split_keys(key, 4)
+    embed, _ = L.init_embedding(k_e, config, dtype)
+    enc_layers = jax.vmap(lambda k: _init_enc_block(k, config, dtype))(
+        jax.random.split(k_enc, config.encoder_layers))
+    dec_layers = jax.vmap(lambda k: _init_dec_block(k, config, dtype))(
+        jax.random.split(k_dec, config.num_layers))
+    enc_pos = L.normal_init(k_p, (config.encoder_seq, config.d_model),
+                            0.02, dtype)
+    enc_norm, _ = L.init_norm(config, dtype)
+    dec_norm, _ = L.init_norm(config, dtype)
+    return {"embed": embed, "enc_pos": enc_pos,
+            "encoder": enc_layers, "enc_norm": enc_norm,
+            "decoder": dec_layers, "dec_norm": dec_norm}
+
+
+def param_specs(config: ModelConfig) -> dict:
+    attn_s = {"wq": ("embed_fsdp", "heads"), "wk": ("embed_fsdp", "kv_heads"),
+              "wv": ("embed_fsdp", "kv_heads"), "wo": ("heads", "embed_fsdp")}
+    mlp_s = {"w_up": ("embed_fsdp", "ff"), "w_down": ("ff", "embed_fsdp")}
+    if config.mlp_gated:
+        mlp_s["w_gate"] = ("embed_fsdp", "ff")
+    norm_s = {"scale": ("embed",), "bias": ("embed",)}
+    enc_block = {"attn": attn_s, "mlp": mlp_s,
+                 "norm1": dict(norm_s), "norm2": dict(norm_s)}
+    dec_block = {"self_attn": dict(attn_s), "cross_attn": dict(attn_s),
+                 "mlp": dict(mlp_s), "norm1": dict(norm_s),
+                 "norm2": dict(norm_s), "norm3": dict(norm_s)}
+    stack = lambda tree: jax.tree_util.tree_map(
+        lambda axes: ("layers",) + axes, tree,
+        is_leaf=lambda x: isinstance(x, tuple))
+    embed_s = {"tok": ("vocab", "embed_fsdp"),
+               "pos": ("null", "embed_fsdp")}
+    if not config.tie_embeddings:
+        embed_s["lm_head"] = ("embed_fsdp", "vocab")
+    return {"embed": embed_s, "enc_pos": ("frames", "embed_fsdp"),
+            "encoder": stack(enc_block), "enc_norm": dict(norm_s),
+            "decoder": stack(dec_block), "dec_norm": dict(norm_s)}
+
+
+# -- encoder ------------------------------------------------------------------
+def encode(params: dict, frames: jax.Array, config: ModelConfig) -> jax.Array:
+    x = frames.astype(config.activation_dtype)
+    x = x + params["enc_pos"].astype(x.dtype)[None, : x.shape[1]]
+    B, T, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+    x = logical_constraint(x, "batch", "act_seq", "embed")
+
+    def body(x, p):
+        h = L.apply_norm(x, p["norm1"], config)
+        a, _ = attn.attention_layer(h, p["attn"], config, positions,
+                                    causal=False)
+        x = x + a
+        h = L.apply_norm(x, p["norm2"], config)
+        x = x + L.mlp(h, p["mlp"], config)
+        return logical_constraint(x, "batch", "act_seq", "embed"), None
+
+    if config.remat != "none":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return L.apply_norm(x, params["enc_norm"], config)
+
+
+# -- decoder -------------------------------------------------------------------
+def _decode_layers(params: dict, x: jax.Array, config: ModelConfig,
+                   positions: jax.Array, enc_out: jax.Array | None,
+                   cache: dict | None) -> tuple[jax.Array, dict | None]:
+    pos_scalar = None if cache is None else cache["pos"]
+
+    def body(x, xs):
+        if cache is None:
+            p = xs
+            layer_cache = None
+            cross_kv = None
+        else:
+            p, sk, sv, ck, cv = xs
+            layer_cache = {"k": sk, "v": sv, "pos": pos_scalar}
+            cross_kv = (ck, cv) if enc_out is None else None
+        h = L.apply_norm(x, p["norm1"], config)
+        a, nc = attn.attention_layer(h, p["self_attn"], config, positions,
+                                     cache=layer_cache)
+        x = x + a
+        h = L.apply_norm(x, p["norm2"], config)
+        if enc_out is not None:        # train/prefill: project enc K/V fresh
+            c, cross_cache = attn.attention_layer(
+                h, p["cross_attn"], config, positions, kv_source=enc_out)
+        else:                           # decode: reuse cached cross K/V
+            c, cross_cache = attn.attention_layer(
+                h, p["cross_attn"], config, positions,
+                precomputed_kv=cross_kv)
+        x = x + c
+        h = L.apply_norm(x, p["norm3"], config)
+        x = x + L.mlp(h, p["mlp"], config)
+        x = logical_constraint(x, "batch", "act_seq", "embed")
+        ys = None
+        if cache is not None:
+            ck_new = nc["k"], nc["v"]
+            cr = (cross_cache["k"], cross_cache["v"]) if enc_out is not None \
+                else cross_kv
+            ys = (*ck_new, *cr)
+        return x, ys
+
+    if config.remat != "none":
+        body = jax.checkpoint(body)
+    xs = params["decoder"] if cache is None else (
+        params["decoder"], cache["self_k"], cache["self_v"],
+        cache["cross_k"], cache["cross_v"])
+    x, ys = jax.lax.scan(body, x, xs)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"self_k": ys[0], "self_v": ys[1],
+                     "cross_k": ys[2], "cross_v": ys[3],
+                     "pos": pos_scalar + positions.shape[1]}
+    return x, new_cache
+
+
+def _embed_dec(params: dict, tokens: jax.Array, config: ModelConfig,
+               start_pos) -> tuple[jax.Array, jax.Array]:
+    B, S = tokens.shape
+    x = L.embed_tokens(tokens, params["embed"], config)
+    positions = start_pos + jnp.broadcast_to(jnp.arange(S), (B, S))
+    x = x + params["embed"]["pos"].astype(x.dtype)[positions]
+    return logical_constraint(x, "batch", "act_seq", "embed"), positions
+
+
+# -- model API -----------------------------------------------------------------
+def loss_and_metrics(params: dict, batch: dict, config: ModelConfig
+                     ) -> tuple[jax.Array, dict]:
+    from repro.models.transformer import _chunked_ce
+    tokens = batch["tokens"]
+    enc_out = encode(params, batch["frames"], config)
+    x, positions = _embed_dec(params, tokens, config, 0)
+    x, _ = _decode_layers(params, x, config, positions, enc_out, None)
+    x = L.apply_norm(x, params["dec_norm"], config)
+    targets = tokens[:, 1:]
+    mask = batch.get("loss_mask")
+    mask = jnp.ones(targets.shape, jnp.float32) if mask is None else mask[:, 1:]
+    loss = _chunked_ce(x[:, :-1], params, config, targets, mask)
+    return loss, {"loss": loss, "aux_loss": jnp.zeros((), jnp.float32)}
+
+
+def init_cache(config: ModelConfig, batch: int, max_len: int) -> dict:
+    kh, hd = config.num_kv_heads, config.resolved_head_dim
+    Lc, T = config.num_layers, config.encoder_seq
+    dtype = config.activation_dtype
+    return {"self_k": jnp.zeros((Lc, batch, max_len, kh, hd), dtype),
+            "self_v": jnp.zeros((Lc, batch, max_len, kh, hd), dtype),
+            "cross_k": jnp.zeros((Lc, batch, T, kh, hd), dtype),
+            "cross_v": jnp.zeros((Lc, batch, T, kh, hd), dtype),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def cache_specs(config: ModelConfig) -> dict:
+    kv = ("layers", "batch", "null", "kv_heads", "head_dim")
+    return {"self_k": kv, "self_v": kv, "cross_k": kv, "cross_v": kv,
+            "pos": ()}
+
+
+def prefill(params: dict, batch: dict, config: ModelConfig,
+            max_len: int | None = None) -> tuple[jax.Array, dict]:
+    tokens = batch["tokens"]
+    enc_out = encode(params, batch["frames"], config)
+    cache = init_cache(config, tokens.shape[0], max_len or tokens.shape[1])
+    x, positions = _embed_dec(params, tokens, config, 0)
+    x, cache = _decode_layers(params, x, config, positions, enc_out, cache)
+    x = L.apply_norm(x, params["dec_norm"], config)
+    logits = L.lm_logits(x[:, -1:], params["embed"], config)
+    return logits, cache
+
+
+def decode_step(params: dict, tokens: jax.Array, cache: dict,
+                config: ModelConfig) -> tuple[jax.Array, dict]:
+    x, positions = _embed_dec(params, tokens, config, cache["pos"])
+    x, cache = _decode_layers(params, x, config, positions, None, cache)
+    x = L.apply_norm(x, params["dec_norm"], config)
+    logits = L.lm_logits(x, params["embed"], config)
+    return logits, cache

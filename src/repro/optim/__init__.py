@@ -1,0 +1,14 @@
+"""Optimizer substrate: AdamW + ZeRO-1, LR schedules, clipping, gradient
+compression with error feedback."""
+from repro.optim.adamw import (adamw_update, add_zero_axis,
+                               clip_by_global_norm, init_opt_state,
+                               lr_schedule, zero1_state_specs)
+from repro.optim.compression import (compressed_psum, dequantize_int8,
+                                     ef_compress_tree, init_residual,
+                                     quantize_int8)
+
+__all__ = [
+    "adamw_update", "add_zero_axis", "clip_by_global_norm", "init_opt_state",
+    "lr_schedule", "zero1_state_specs", "compressed_psum", "dequantize_int8",
+    "ef_compress_tree", "init_residual", "quantize_int8",
+]

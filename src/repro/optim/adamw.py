@@ -1,0 +1,144 @@
+"""AdamW with fp32 master weights + ZeRO-1 state sharding (from scratch;
+no optax in this container).
+
+Memory layout at scale (the reason ZeRO-1 is not optional at 512 chips):
+params may be bf16 (2 B) and TP-sharded; m/v (+ optional fp32 master) are
+3×4 B/param — sharded *additionally* over the 'data' axis by giving the
+optimizer state a PartitionSpec with 'data' on the first free dimension.
+Under GSPMD this materializes exactly the ZeRO-1 schedule: gradients
+reduce-scatter onto the state shards, the update runs sharded, and the new
+params all-gather back to their TP layout.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import OptimizerConfig
+
+
+# -- schedule -------------------------------------------------------------------
+def lr_schedule(step: jax.Array, config: OptimizerConfig) -> jax.Array:
+    """Linear warmup -> cosine decay to 10%."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(config.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - config.warmup_steps)
+                 / jnp.maximum(config.total_steps - config.warmup_steps, 1),
+                 0.0, 1.0)
+    cos = 0.1 + 0.45 * (1.0 + jnp.cos(jnp.pi * t))
+    return config.lr * warm * cos
+
+
+# -- grad clipping ---------------------------------------------------------------
+def clip_by_global_norm(grads: Any, max_norm: float) -> tuple[Any, jax.Array]:
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gnorm
+
+
+# -- state -----------------------------------------------------------------------
+def init_opt_state(params: Any, config: OptimizerConfig) -> dict:
+    sdtype = jnp.dtype(config.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, sdtype)
+    state = {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if config.master_fp32:
+        state["master"] = jax.tree_util.tree_map(
+            lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def adamw_update(params: Any, grads: Any, state: dict,
+                 config: OptimizerConfig) -> tuple[Any, dict, dict]:
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = lr_schedule(step, config)
+    if config.grad_clip > 0:
+        grads, gnorm = clip_by_global_norm(grads, config.grad_clip)
+    else:
+        gnorm = jnp.zeros(())
+    b1, b2 = config.b1, config.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    ref = state.get("master", params)
+
+    sdtype = jnp.dtype(config.state_dtype)
+
+    def upd(p_ref, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+        mh, vh = m32 / c1, v32 / c2
+        delta = mh / (jnp.sqrt(vh) + config.eps)
+        p32 = p_ref.astype(jnp.float32)
+        if config.weight_decay > 0 and p_ref.ndim >= 2:
+            delta = delta + config.weight_decay * p32
+        return p32 - lr * delta, m32.astype(sdtype), v32.astype(sdtype)
+
+    out = jax.tree_util.tree_map(upd, ref, grads, state["m"], state["v"])
+    new_ref = jax.tree_util.tree_map(lambda t: t[0], out,
+                                     is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree_util.tree_map(lambda t: t[1], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree_util.tree_map(lambda t: t[2], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    if "master" in state:
+        new_state["master"] = new_ref
+        new_params = jax.tree_util.tree_map(
+            lambda nr, p: nr.astype(p.dtype), new_ref, params)
+    else:
+        new_params = jax.tree_util.tree_map(
+            lambda nr, p: nr.astype(p.dtype), new_ref, params)
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_params, new_state, metrics
+
+
+# -- ZeRO-1 sharding ------------------------------------------------------------
+def add_zero_axis(spec: P, shape: tuple[int, ...], mesh: Mesh,
+                  axis: str = "data") -> P:
+    """Add ``axis`` to the first dimension it divides and that is unsharded.
+    Falls back to the original spec when nothing fits (tiny tensors)."""
+    if axis not in mesh.axis_names:
+        return spec
+    used = {a for part in spec if part is not None
+            for a in (part if isinstance(part, tuple) else (part,))}
+    if axis in used:      # already sharded over it (e.g. FSDP weights)
+        return spec
+    n = mesh.shape[axis]
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (dim, cur) in enumerate(zip(shape, parts)):
+        if cur is None and dim % n == 0 and dim >= n:
+            parts[i] = axis
+            return P(*parts)
+    return spec
+
+
+def zero1_state_specs(param_specs: Any, param_shapes: Any, mesh: Mesh,
+                      config: OptimizerConfig) -> dict:
+    """PartitionSpec tree for the optimizer state (ZeRO-1 over 'data', and
+    over 'pod' too on the multi-pod mesh — 1T-class configs need both)."""
+    def zspec(spec, shape):
+        if not config.zero1:
+            return spec
+        spec = add_zero_axis(spec, shape.shape, mesh, axis="data")
+        return add_zero_axis(spec, shape.shape, mesh, axis="pod")
+
+    mz = jax.tree_util.tree_map(zspec, param_specs, param_shapes,
+                                is_leaf=lambda x: isinstance(x, P))
+    state = {"m": mz, "v": mz, "step": P()}
+    if config.master_fp32:
+        state["master"] = mz
+    return state

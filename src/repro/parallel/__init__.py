@@ -1,0 +1,1 @@
+"""Parallelism substrate: logical sharding rules, collectives, pipeline."""

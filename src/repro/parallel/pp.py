@@ -1,0 +1,104 @@
+"""GPipe pipeline parallelism over the 'pod' axis.
+
+Cross-pod DCN is ~10× slower than ICI, so the multi-pod mesh wants the
+parallelism with the *least* inter-pod traffic. DP moves 2×params of
+gradients per step over DCN; pipeline parallelism moves only microbatch
+activations (B_mb·S·D per boundary per tick) — for the 1T config that is
+three orders of magnitude less wire.
+
+Implementation: ``shard_map`` manual over 'pod' only (``axis_names=
+{'pod'}``) — GSPMD keeps handling data/model INSIDE each stage, so TP/DP
+compose under the pipeline unchanged. The stacked layer params shard over
+'pod' on the layer dim (each pod holds L/n_stages layers). The schedule is
+plain GPipe: M microbatches, M + n_stages - 1 ticks, activations hop stages
+via ``ppermute``; every stage computes every tick (the bubble is the
+standard (n_stages-1)/M overhead and is *visible* in the walker FLOPs —
+honest accounting). Backward works by AD: ``ppermute`` transposes to the
+reverse hop, giving the mirrored backward pipeline for free.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.utils import get_logger
+
+log = get_logger(__name__)
+
+
+def gpipe_apply(stage_fn: Callable[[jax.Array, Any], jax.Array],
+                stage_params: Any, mbs: jax.Array, n_stages: int,
+                axis: str = "pod") -> jax.Array:
+    """Run ``stage_fn`` as a GPipe pipeline inside a manual-'pod' region.
+
+    mbs: (M, mb, S, D) microbatch activations (consumed by stage 0).
+    Returns (M, mb, S, D) outputs (valid on every rank — broadcast from the
+    last stage with a masked psum)."""
+    r = jax.lax.axis_index(axis)
+    M = mbs.shape[0]
+    T = M + n_stages - 1
+    perm = [(i, i + 1) for i in range(n_stages - 1)]
+    zero = jnp.zeros_like(mbs[0])
+
+    def tick(carry, t):
+        prev = carry                                    # my last output
+        recv = jax.lax.ppermute(prev, axis, perm)       # from stage r-1
+        feed = mbs[jnp.clip(t, 0, M - 1)]
+        x_in = jnp.where(r == 0, feed, recv)
+        y = stage_fn(x_in, stage_params)
+        return y, y
+
+    _, ys = jax.lax.scan(tick, zero, jnp.arange(T))
+    outs = ys[n_stages - 1:]                            # (M, mb, S, D)
+    # only the last stage's values are real; broadcast them
+    outs = jnp.where(r == n_stages - 1, outs, jnp.zeros_like(outs))
+    return jax.lax.psum(outs, axis)
+
+
+def pipeline_layers(run_block: Callable[[jax.Array, Any], jax.Array],
+                    layer_params: Any, x: jax.Array, mesh: Mesh,
+                    num_layers: int, microbatches: int,
+                    axis: str = "pod") -> jax.Array:
+    """Pipeline a stacked-layer transformer body over the 'pod' axis.
+
+    x: (B, S, D) full batch activations (replicated over 'pod');
+    layer_params: stacked (L, ...) pytree (sharded over 'pod' on dim 0).
+    run_block(x, one_layer_params) -> x."""
+    n_stages = mesh.shape[axis]
+    if n_stages <= 1:
+        def seq(x):
+            def body(x, p):
+                return run_block(x, p), None
+            x, _ = jax.lax.scan(body, x, layer_params)
+            return x
+        return seq(x)
+    assert num_layers % n_stages == 0, "layers must split evenly into stages"
+    B = x.shape[0]
+    assert B % microbatches == 0, "batch must split into microbatches"
+    mb = B // microbatches
+    mbs = x.reshape(microbatches, mb, *x.shape[1:])
+
+    def stage_fn(x_in, params_stage):
+        def body(x, p):
+            return run_block(x, p), None
+        x_out, _ = jax.lax.scan(body, x_in, params_stage)
+        return x_out
+
+    spec_layers = jax.tree_util.tree_map(lambda _: P(axis), layer_params)
+    pipe = jax.shard_map(
+        functools.partial(gpipe_apply, stage_fn, n_stages=n_stages,
+                          axis=axis),
+        mesh=mesh,
+        in_specs=(spec_layers, P()),
+        out_specs=P(),
+        axis_names={axis},
+        check_vma=False,
+    )
+    out = pipe(layer_params, mbs)
+    return out.reshape(B, *x.shape[1:])

@@ -1,0 +1,215 @@
+"""Logical-axis sharding: DP / TP / EP / FSDP / SP rules over the (pod, data,
+model) production mesh.
+
+Models annotate tensors with *logical* axis names ('batch', 'heads', 'ff',
+'experts', ...); a rule table maps logical names to physical mesh axes. The
+same model code then runs on a 1-device test mesh, the 16×16 single-pod mesh,
+or the 2×16×16 multi-pod mesh — only the rules change. This is the standard
+GSPMD recipe (t5x/MaxText-style), and it is how the Spark-MPI "collective
+program" stays portable across deployments (the paper's "no changes to MPI
+programs" property).
+
+Default layout:
+  * batch        -> ('pod', 'data')   pure DP; gradients all-reduce over it
+  * heads/kv/ff/vocab/experts -> 'model'   Megatron TP / expert parallelism
+  * expert_in    -> 'data' (opt-in)   FSDP-style weight sharding for 1T MoE
+  * seq_shard    -> 'data' (opt-in)   sequence/context parallelism
+  * opt state    -> extra 'data' sharding (ZeRO-1), see optim/adamw.py
+
+Rules are per-config overridable (``ShardingRules(overrides=...)``).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.utils import get_logger
+
+log = get_logger(__name__)
+
+# Logical axis -> preferred mesh axes (first existing one wins; tuples mean
+# "shard over the product of these axes").
+DEFAULT_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "seq": None,            # attention-internal sequence axis (kept whole)
+    "act_seq": "model",     # residual-stream sequence axis: Megatron-style
+                            # sequence parallelism (layer inputs/outputs are
+                            # seq-sharded over 'model'; XLA inserts the
+                            # all-gather / reduce-scatter pair per block).
+                            # Dropped automatically when S % model != 0
+                            # (e.g. decode S=1).
+    "seq_shard": None,      # opt-in context parallelism
+    "embed": None,          # d_model is kept replicated by default
+    "embed_fsdp": None,     # opt-in: shard d_model dim of weights over 'data'
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "ff": "model",
+    "vocab": "model",
+    "experts": "model",
+    "experts_a2a": ("model", "data"),  # a2a EP: whole experts per device
+    "expert_in": None,      # opt-in FSDP for expert weights: 'data'
+    "expert_cap": "data",   # expert capacity dim follows the data shards
+    "layers": None,         # scan-stacked layer dim
+    "conv": None,
+    "lru": "model",
+    "frames": None,
+    "null": None,
+}
+
+
+@dataclass
+class ShardingRules:
+    overrides: dict[str, Any] = field(default_factory=dict)
+
+    def physical(self, logical: str) -> Any:
+        table = {**DEFAULT_RULES, **self.overrides}
+        if logical not in table:
+            raise KeyError(f"unknown logical axis {logical!r}")
+        return table[logical]
+
+    def spec(self, logical_axes: Sequence[str | None],
+             mesh: Mesh | None) -> P:
+        """PartitionSpec for a tensor annotated with logical axis names.
+
+        Mesh axes that don't exist on the current mesh (e.g. 'pod' on the
+        single-pod mesh) are silently dropped — the same annotation works on
+        every deployment size. Avoids double-assigning a mesh axis."""
+        used: set[str] = set()
+        parts: list[Any] = []
+        axis_names = set(mesh.axis_names) if mesh is not None else set()
+        for name in logical_axes:
+            if name is None:
+                parts.append(None)
+                continue
+            phys = self.physical(name)
+            if phys is None:
+                parts.append(None)
+                continue
+            cand = phys if isinstance(phys, tuple) else (phys,)
+            cand = tuple(a for a in cand if a in axis_names and a not in used)
+            if not cand:
+                parts.append(None)
+            elif len(cand) == 1:
+                parts.append(cand[0])
+                used.add(cand[0])
+            else:
+                parts.append(cand)
+                used.update(cand)
+        while parts and parts[-1] is None:
+            parts.pop()
+        return P(*parts)
+
+
+# -- active mesh/rules context ----------------------------------------------
+class _ShardingContext(threading.local):
+    def __init__(self) -> None:
+        self.mesh: Mesh | None = None
+        self.rules: ShardingRules = ShardingRules()
+
+
+_ctx = _ShardingContext()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh | None, rules: ShardingRules | None = None):
+    """Activate a mesh + rule table for logical_constraint/named_sharding."""
+    prev = (_ctx.mesh, _ctx.rules)
+    _ctx.mesh = mesh
+    if rules is not None:
+        _ctx.rules = rules
+    try:
+        if mesh is not None:
+            with mesh:
+                yield
+        else:
+            yield
+    finally:
+        _ctx.mesh, _ctx.rules = prev
+
+
+def current_mesh() -> Mesh | None:
+    return _ctx.mesh
+
+
+def current_rules() -> ShardingRules:
+    return _ctx.rules
+
+
+def drop_indivisible(spec: P, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Drop mesh axes whose size does not divide the tensor dim (e.g. 56
+    query heads over a 16-way 'model' axis): the tensor falls back to coarser
+    sharding instead of GSPMD padding — the divisibility waste then shows up
+    honestly in the roofline as replicated compute, where the §Perf loop can
+    attack it per-arch. (jit in_shardings *require* divisibility.)"""
+    parts: list[Any] = []
+    for i, part in enumerate(spec):
+        if part is None or i >= len(shape):
+            parts.append(None)
+            continue
+        axes = part if isinstance(part, tuple) else (part,)
+        total = int(np.prod([mesh.shape[a] for a in axes]))
+        if shape[i] % total != 0:
+            kept = []
+            size = 1
+            for a in axes:  # keep a prefix that still divides
+                if shape[i] % (size * mesh.shape[a]) == 0:
+                    kept.append(a)
+                    size *= mesh.shape[a]
+            part = tuple(kept) if len(kept) > 1 else (kept[0] if kept else None)
+        parts.append(part)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def logical_constraint(x: jax.Array, *logical_axes: str | None) -> jax.Array:
+    """with_sharding_constraint by logical names; no-op without a mesh."""
+    mesh = _ctx.mesh
+    if mesh is None or np.prod(list(mesh.shape.values())) == 1:
+        return x
+    spec = _ctx.rules.spec(logical_axes, mesh)
+    spec = drop_indivisible(spec, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(logical_axes: Sequence[str | None],
+                   mesh: Mesh | None = None,
+                   rules: ShardingRules | None = None) -> NamedSharding:
+    mesh = mesh or _ctx.mesh
+    rules = rules or _ctx.rules
+    if mesh is None:
+        raise ValueError("no active mesh")
+    return NamedSharding(mesh, rules.spec(logical_axes, mesh))
+
+
+def tree_shardings(spec_tree: Any, mesh: Mesh | None = None,
+                   rules: ShardingRules | None = None) -> Any:
+    """Map a pytree of logical-axis tuples to NamedShardings."""
+    return jax.tree_util.tree_map(
+        lambda axes: named_sharding(axes, mesh, rules),
+        spec_tree, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def tree_specs(spec_tree: Any, mesh: Mesh, rules: ShardingRules | None = None) -> Any:
+    rules = rules or _ctx.rules
+    return jax.tree_util.tree_map(
+        lambda axes: rules.spec(axes, mesh),
+        spec_tree, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def tree_specs_shaped(spec_tree: Any, shape_tree: Any, mesh: Mesh,
+                      rules: ShardingRules | None = None) -> Any:
+    """Like tree_specs but drops axes that don't divide the actual shapes
+    (required for jit in_shardings)."""
+    rules = rules or _ctx.rules
+    return jax.tree_util.tree_map(
+        lambda axes, shp: drop_indivisible(rules.spec(axes, mesh),
+                                           tuple(shp.shape), mesh),
+        spec_tree, shape_tree, is_leaf=lambda x: isinstance(x, tuple))

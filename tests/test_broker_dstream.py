@@ -1,0 +1,129 @@
+"""Broker (Kafka semantics) + discretized streams."""
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Broker, Context, OffsetRange, StreamingContext, create_rdd
+
+
+def test_partition_order_and_offsets():
+    b = Broker()
+    b.create_topic("t", 2)
+    for i in range(10):
+        b.produce("t", i, partition=i % 2)
+    recs = b.read(OffsetRange("t", 0, 0, 5))
+    assert [r.value for r in recs] == [0, 2, 4, 6, 8]
+    assert [r.offset for r in recs] == list(range(5))
+    assert b.end_offsets("t") == [5, 5]
+
+
+def test_offset_range_reads_are_replayable():
+    b = Broker()
+    b.create_topic("t", 1)
+    for i in range(8):
+        b.produce("t", i)
+    ctx = Context()
+    r1 = create_rdd(ctx, b, [OffsetRange("t", 0, 2, 6)])
+    r2 = create_rdd(ctx, b, [OffsetRange("t", 0, 2, 6)])
+    assert r1.collect() == r2.collect() == [2, 3, 4, 5]
+
+
+@given(st.lists(st.integers(0, 3), min_size=1, max_size=80))
+@settings(max_examples=25, deadline=None)
+def test_property_per_partition_total_order(partition_choices):
+    """However producers interleave, each partition's log preserves produce
+    order (Kafka's ordering contract: total per-partition, none across)."""
+    b = Broker()
+    b.create_topic("t", 4)
+    expect: dict[int, list[int]] = {p: [] for p in range(4)}
+    for i, p in enumerate(partition_choices):
+        b.produce("t", i, partition=p)
+        expect[p].append(i)
+    for p in range(4):
+        got = [r.value for r in b.read(OffsetRange("t", p, 0, 10 ** 6))]
+        assert got == expect[p]
+
+
+def test_microbatch_union_across_topics():
+    b = Broker()
+    b.create_topic("a", 1)
+    b.create_topic("b", 2)
+    for i in range(6):
+        b.produce("a", ("a", i))
+        b.produce("b", ("b", i), partition=i % 2)
+    ctx = Context()
+    sc = StreamingContext(ctx, b)
+    sc.subscribe(["a", "b"])
+    seen = []
+    sc.foreach_batch(lambda rdd, info: seen.extend(rdd.collect()))
+    info = sc.run_one_batch()
+    assert info.num_records == 12
+    assert sorted(x[1] for x in seen if x[0] == "a") == list(range(6))
+    assert sc.run_one_batch() is None      # drained
+
+
+def test_offset_checkpoint_resume(tmp_path):
+    """Restarted stream resumes exactly after the last committed batch."""
+    b = Broker()
+    b.create_topic("t", 1)
+    for i in range(10):
+        b.produce("t", i)
+    path = str(tmp_path / "progress.json")
+    ctx = Context()
+    sc = StreamingContext(ctx, b, max_records_per_partition=4,
+                          checkpoint_path=path)
+    sc.subscribe(["t"])
+    got = []
+    sc.foreach_batch(lambda rdd, info: got.extend(rdd.collect()))
+    sc.run_one_batch()
+    assert got == [0, 1, 2, 3]
+    # "crash" -> new context from the same checkpoint
+    sc2 = StreamingContext(ctx, b, max_records_per_partition=4,
+                           checkpoint_path=path)
+    sc2.subscribe(["t"])
+    got2 = []
+    sc2.foreach_batch(lambda rdd, info: got2.extend(rdd.collect()))
+    sc2.run_one_batch()
+    sc2.run_one_batch()
+    assert got2 == [4, 5, 6, 7, 8, 9]
+
+
+def test_failed_batch_does_not_commit(tmp_path):
+    b = Broker()
+    b.create_topic("t", 1)
+    for i in range(4):
+        b.produce("t", i)
+    ctx = Context()
+    sc = StreamingContext(ctx, b, checkpoint_path=str(tmp_path / "p.json"))
+    sc.subscribe(["t"])
+    calls = {"n": 0}
+
+    def flaky(rdd, info):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("transient sink failure")
+        return rdd.collect()
+
+    sc.foreach_batch(flaky)
+    with pytest.raises(RuntimeError):
+        sc.run_one_batch()
+    info = sc.run_one_batch()              # replays the same records
+    assert info.result == [0, 1, 2, 3]     # at-least-once delivery
+
+
+def test_realtime_report():
+    b = Broker()
+    b.create_topic("t", 1)
+    for i in range(20):
+        b.produce("t", i)
+    ctx = Context()
+    sc = StreamingContext(ctx, b, batch_interval=5.0,
+                          max_records_per_partition=5)
+    sc.subscribe(["t"])
+    sc.foreach_batch(lambda rdd, info: rdd.count())
+    sc.run_batches(4)
+    rep = sc.realtime_report()
+    assert rep["batches"] == 4 and rep["records"] == 20
+    assert rep["keeps_up"] is True

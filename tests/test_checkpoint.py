@@ -1,0 +1,70 @@
+"""Checkpointing: roundtrip, bf16, async, atomicity, gc."""
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import AsyncCheckpointer, latest_step, restore, save
+
+
+def tree():
+    return {"params": {"w": jnp.arange(12, dtype=jnp.bfloat16).reshape(3, 4),
+                       "b": jnp.ones((5,), jnp.float32)},
+            "opt": {"step": jnp.asarray(7, jnp.int32)}}
+
+
+def test_roundtrip_bf16(tmp_path):
+    t = tree()
+    save(str(tmp_path), 7, t)
+    got, step = restore(str(tmp_path), jax.eval_shape(lambda: t))
+    assert step == 7
+    for a, b in zip(jax.tree_util.tree_leaves(t),
+                    jax.tree_util.tree_leaves(got)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_latest_pointer_and_explicit_step(tmp_path):
+    t = tree()
+    save(str(tmp_path), 1, t)
+    save(str(tmp_path), 5, t)
+    assert latest_step(str(tmp_path)) == 5
+    _, step = restore(str(tmp_path), jax.eval_shape(lambda: t), step=1)
+    assert step == 1
+
+
+def test_crash_mid_save_keeps_previous(tmp_path):
+    """A stale .tmp dir (crash artifact) must not break restore of the last
+    good checkpoint."""
+    t = tree()
+    save(str(tmp_path), 3, t)
+    os.makedirs(tmp_path / "step_00000004.tmp")
+    with open(tmp_path / "step_00000004.tmp" / "garbage.npy", "w") as f:
+        f.write("partial")
+    got, step = restore(str(tmp_path), jax.eval_shape(lambda: t))
+    assert step == 3
+
+
+def test_async_checkpointer_and_gc(tmp_path):
+    ck = AsyncCheckpointer(str(tmp_path), keep=2)
+    t = tree()
+    for s in (1, 2, 3, 4):
+        ck.save(s, t)
+    ck.wait()
+    steps = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert steps == ["step_00000003", "step_00000004"]
+    got, step = restore(str(tmp_path), jax.eval_shape(lambda: t))
+    assert step == 4
+
+
+def test_missing_leaf_raises(tmp_path):
+    t = tree()
+    save(str(tmp_path), 1, t)
+    bigger = {**t, "extra": jnp.zeros((2,))}
+    with pytest.raises(KeyError):
+        restore(str(tmp_path), jax.eval_shape(lambda: bigger))

@@ -1,0 +1,156 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.art import ops as art_ops
+from repro.kernels.art import ref as art_ref
+from repro.kernels.flash_attention import kernel as fa_kernel
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention import ref as fa_ref
+from repro.kernels.modulus import kernel as mod_kernel
+from repro.kernels.modulus import ref as mod_ref
+from repro.kernels.overlap import kernel as ov_kernel
+from repro.kernels.overlap import ref as ov_ref
+from repro.kernels.raar import kernel as raar_kernel
+from repro.kernels.raar import ref as raar_ref
+
+
+def _planes(key, shape, dtype=jnp.float32, n=1):
+    keys = jax.random.split(key, n)
+    return [jax.random.normal(k, shape, dtype) for k in keys]
+
+
+# -- modulus -------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [(4, 16, 16), (7, 32, 32), (16, 8, 24),
+                                   (1, 64, 64)])
+@pytest.mark.parametrize("fb", [2, 16])
+def test_modulus_sweep(shape, fb):
+    key = jax.random.PRNGKey(hash(shape) % 2**31)
+    re, im, mag = _planes(key, shape, n=3)
+    mag = jnp.abs(mag)
+    got = mod_kernel.modulus_project(re, im, mag, block_frames=fb,
+                                     interpret=True)
+    want = mod_ref.modulus_project_ref(re, im, mag)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_modulus_projection_property():
+    """|π₁ψ| == measured magnitude (the modulus constraint, paper eq. 1)."""
+    key = jax.random.PRNGKey(0)
+    re, im, mag = _planes(key, (3, 16, 16), n=3)
+    mag = jnp.abs(mag) + 0.1
+    ore, oim = mod_kernel.modulus_project(re, im, mag, interpret=True)
+    np.testing.assert_allclose(np.sqrt(np.asarray(ore)**2 + np.asarray(oim)**2),
+                               np.asarray(mag), rtol=1e-4, atol=1e-4)
+
+
+# -- raar ----------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [(4, 16, 16), (5, 8, 40)])
+@pytest.mark.parametrize("beta", [0.5, 0.75, 0.9])
+def test_raar_sweep(shape, beta):
+    key = jax.random.PRNGKey(1)
+    planes = _planes(key, shape, n=8)
+    got = raar_kernel.raar_combine(*planes, beta=beta, block_frames=3,
+                                   interpret=True)
+    want = raar_ref.raar_combine_ref(*planes, beta=beta)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-6, atol=1e-6)
+
+
+# -- overlap -------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [(4, 16, 16), (9, 24, 8)])
+def test_overlap_sweep(shape):
+    key = jax.random.PRNGKey(2)
+    a_re, a_im, b_re, b_im = _planes(key, shape, n=4)
+    got = ov_kernel.overlap_products(a_re, a_im, b_re, b_im, block_frames=4,
+                                     interpret=True)
+    want = ov_ref.overlap_products_ref(a_re, a_im, b_re, b_im)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_overlap_matches_complex_ref():
+    key = jax.random.PRNGKey(3)
+    a_re, a_im, b_re, b_im = _planes(key, (3, 8, 8), n=4)
+    a = a_re + 1j * a_im
+    b = b_re + 1j * b_im
+    n_re, n_im, den = ov_kernel.overlap_products(a_re, a_im, b_re, b_im,
+                                                 interpret=True)
+    num_c, den_c = ov_ref.overlap_products_complex(a, b)
+    np.testing.assert_allclose(np.asarray(n_re + 1j * n_im),
+                               np.asarray(num_c), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(den), np.asarray(den_c),
+                               rtol=1e-5, atol=1e-5)
+
+
+# -- art ----------------------------------------------------------------------
+@pytest.mark.parametrize("nrow,ncol", [(8, 16), (20, 12), (32, 64)])
+@pytest.mark.parametrize("iters", [1, 3])
+def test_art_sweep(nrow, ncol, iters):
+    key = jax.random.PRNGKey(4)
+    A = jax.random.normal(key, (nrow, ncol))
+    f_true = jax.random.normal(jax.random.PRNGKey(5), (ncol,))
+    b = A @ f_true
+    rip = jnp.sum(A * A, axis=1)
+    inv_rip = 1.0 / rip
+    f0 = jnp.zeros((ncol,))
+    from repro.kernels.art import kernel as art_kernel
+    got = art_kernel.art_sweep(A, b, inv_rip, f0, beta=1.0, iters=iters,
+                               interpret=True)
+    want = art_ref.art_sweep_ref(A, b, inv_rip, f0, beta=1.0, iters=iters)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_art_converges_consistent_system():
+    """Kaczmarz converges on a consistent overdetermined system."""
+    key = jax.random.PRNGKey(6)
+    A = jax.random.normal(key, (64, 16))
+    f_true = jax.random.normal(jax.random.PRNGKey(7), (16,))
+    b = A @ f_true
+    f = art_ops.art_reconstruct_slice(A, b, jnp.zeros((16,)), beta=1.0,
+                                      iters=30, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(f), np.asarray(f_true),
+                               rtol=1e-3, atol=1e-3)
+
+
+# -- flash attention ------------------------------------------------------------
+@pytest.mark.parametrize("S,hd,bq,bkv", [(64, 16, 16, 32), (128, 32, 32, 32),
+                                         (32, 8, 32, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(S, hd, bq, bkv, dtype):
+    key = jax.random.PRNGKey(8)
+    BH = 4
+    q = jax.random.normal(key, (BH, S, hd), dtype)
+    k = jax.random.normal(jax.random.PRNGKey(9), (BH, S, hd), dtype)
+    v = jax.random.normal(jax.random.PRNGKey(10), (BH, S, hd), dtype)
+    got = fa_kernel.flash_attention_bhsd(q, k, v, block_q=bq, block_kv=bkv,
+                                         causal=True, interpret=True)
+    want = fa_ref.attention_ref(q, k, v, causal=True)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_model_layout():
+    """ops wrapper: (B, S, H, hd) layout, padding path."""
+    key = jax.random.PRNGKey(11)
+    B, S, H, hd = 2, 40, 4, 16       # S=40 not divisible by blocks -> pad
+    q = jax.random.normal(key, (B, S, H, hd))
+    k = jax.random.normal(jax.random.PRNGKey(12), (B, S, H, hd))
+    v = jax.random.normal(jax.random.PRNGKey(13), (B, S, H, hd))
+    got = fa_ops.flash_attention(q, k, v, block_q=16, block_kv=16,
+                                 use_pallas=True)
+    from repro.models.attention import naive_attention
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    want = naive_attention(q, k, v, pos, pos, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,198 @@
+"""Model substrate: all 10 archs — loss, shapes, serve-path consistency,
+family-specific oracles (rwkv chunked vs recurrent, rglru scan vs step)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import all_archs, get_config
+from repro.models import rwkv6
+from repro.models.registry import get_model
+
+
+def make_batch(cfg, key, B=2, S=32):
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["tokens"] = jax.random.randint(
+            key, (B, S - cfg.num_image_tokens), 0, cfg.vocab_size)
+        batch["image_embeds"] = jax.random.normal(
+            key, (B, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            key, (B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", all_archs())
+def test_arch_smoke_loss_and_specs(arch):
+    """Reduced config: one train-loss eval, finite, spec tree matches."""
+    cfg = get_config(arch, reduced=True)
+    model = get_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key, cfg)
+    specs = model.param_specs(cfg)
+    assert jax.tree_util.tree_structure(params) == \
+        jax.tree_util.tree_structure(
+            specs, is_leaf=lambda x: isinstance(x, tuple))
+    loss, metrics = jax.jit(
+        lambda p, b: model.loss_and_metrics(p, b, cfg))(
+        params, make_batch(cfg, key))
+    assert np.isfinite(float(loss))
+    assert float(loss) < 3.0 * np.log(cfg.vocab_size)
+
+
+@pytest.mark.parametrize("arch", all_archs())
+def test_prefill_then_decode_matches_full_forward(arch):
+    """Greedy continuation via (prefill + decode_step) must equal the
+    argmax of teacher-forced full forwards — the serve-path invariant."""
+    cfg = get_config(arch, reduced=True)
+    if cfg.attention_impl == "blocked":
+        cfg = cfg.replace(attention_impl="naive")
+    model = get_model(cfg)
+    key = jax.random.PRNGKey(1)
+    params = model.init(key, cfg)
+    B, S, G = 2, 12, 4
+    batch = make_batch(cfg, key, B=B, S=S)
+
+    # serve path
+    logits, cache = model.prefill(params, batch, cfg, max_len=S + G)
+    serve_tokens = [jnp.argmax(logits[:, -1], -1)]
+    for _ in range(G - 1):
+        logits, cache = model.decode_step(
+            params, serve_tokens[-1][:, None].astype(jnp.int32), cache, cfg)
+        serve_tokens.append(jnp.argmax(logits[:, -1], -1))
+    serve_tokens = jnp.stack(serve_tokens, axis=1)
+
+    # teacher-forced path: full forward over prompt+generated each step
+    full_tokens = batch["tokens"]
+    for g in range(G):
+        b2 = dict(batch)
+        b2["tokens"] = full_tokens
+        logits2, _ = model.prefill(params, b2, cfg,
+                                   max_len=full_tokens.shape[1] + 1)
+        nxt = jnp.argmax(logits2[:, -1], -1)
+        np.testing.assert_array_equal(np.asarray(nxt),
+                                      np.asarray(serve_tokens[:, g]),
+                                      err_msg=f"{arch} step {g}")
+        full_tokens = jnp.concatenate(
+            [full_tokens, nxt[:, None].astype(jnp.int32)], axis=1)
+
+
+def test_rwkv_chunked_equals_recurrent():
+    """The chunked parallel wkv (training path) must equal the sequential
+    recurrence (decode path) — same math, two schedules."""
+    key = jax.random.PRNGKey(2)
+    B, T, H, K = 2, 21, 3, 8
+    r, k, v = (jax.random.normal(kk, (B, T, H, K))
+               for kk in jax.random.split(key, 3))
+    logw = -jnp.exp(jax.random.normal(jax.random.PRNGKey(3),
+                                      (B, T, H, K)) * 2 - 1.0)
+    u = jax.random.normal(jax.random.PRNGKey(4), (H, K))
+    s0 = jnp.zeros((B, H, K, K))
+    y1, st1 = rwkv6._wkv_chunked(r, k, v, logw, u, s0, chunk=5)
+    y2, st2 = rwkv6._wkv_recurrent(r, k, v, logw, u, s0)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st1), np.asarray(st2),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_rwkv_chunked_extreme_decay_is_stable():
+    """Near-zero decay (w -> 0, the overflow trap for naive chunking) must
+    not produce NaN/Inf — the log-space-difference guarantee."""
+    key = jax.random.PRNGKey(5)
+    B, T, H, K = 1, 16, 2, 4
+    r, k, v = (jax.random.normal(kk, (B, T, H, K))
+               for kk in jax.random.split(key, 3))
+    logw = jnp.full((B, T, H, K), -150.0)     # w = e^-150 ~ 0
+    u = jnp.ones((H, K))
+    y, st = rwkv6._wkv_chunked(r, k, v, logw, u,
+                               jnp.zeros((B, H, K, K)), chunk=8)
+    assert np.all(np.isfinite(np.asarray(y)))
+    y2, _ = rwkv6._wkv_recurrent(r, k, v, logw, u, jnp.zeros((B, H, K, K)))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_rglru_scan_equals_stepwise():
+    from repro.models import rglru
+    cfg = get_config("recurrentgemma-2b", reduced=True)
+    key = jax.random.PRNGKey(6)
+    p = rglru._init_rec_block(key, cfg, jnp.float32)
+    B, T, W = 2, 9, cfg.lru_width
+    x = jax.random.normal(jax.random.PRNGKey(7), (B, T, W))
+    h0 = jnp.zeros((B, W))
+    y_par, h_par = rglru._rg_lru(x, p, h0)
+    h = h0
+    ys = []
+    for t in range(T):
+        y_t, h = rglru._rg_lru_step(x[:, t], p, h)
+        ys.append(y_t)
+    y_seq = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_seq),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(h_par), np.asarray(h),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_moe_router_capacity_and_gates():
+    from repro.models.moe import _positions_in_expert, moe_layer
+    # positions-in-expert: stable ranks
+    e = jnp.asarray([2, 0, 2, 1, 2, 0], jnp.int32)
+    pos = _positions_in_expert(e, 3)
+    np.testing.assert_array_equal(np.asarray(pos), [0, 0, 1, 0, 2, 1])
+
+    cfg = get_config("granite-moe-3b-a800m", reduced=True)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(8), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(9), (2, 16, cfg.d_model),
+                          jnp.bfloat16)
+    layer0 = jax.tree_util.tree_map(lambda p: p[0], params["layers"])
+    out, aux = moe_layer(x, layer0["moe"], cfg)
+    assert out.shape == x.shape
+    assert np.isfinite(float(aux)) and float(aux) >= 0
+
+
+def test_chunked_ce_matches_direct():
+    from repro.models.layers import cross_entropy, lm_logits
+    from repro.models.transformer import _chunked_ce
+    cfg = get_config("internlm2-1.8b", reduced=True)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(10), cfg)
+    B, S = 3, 25
+    x = jax.random.normal(jax.random.PRNGKey(11), (B, S, cfg.d_model),
+                          jnp.float32)
+    targets = jax.random.randint(jax.random.PRNGKey(12), (B, S), 0,
+                                 cfg.vocab_size)
+    mask = (jax.random.uniform(jax.random.PRNGKey(13), (B, S)) > 0.2
+            ).astype(jnp.float32)
+    got = _chunked_ce(x, params, cfg, targets, mask, chunk=7)
+    logits = lm_logits(x, params["embed"], cfg)
+    want = cross_entropy(logits, targets, mask)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-4)
+
+
+def test_sliding_window_cache_wraps_correctly():
+    """Decode past the window: rolling buffer must equal full attention
+    restricted to the window."""
+    from repro.models import attention as A
+    cfg = get_config("recurrentgemma-2b", reduced=True)
+    cfg = cfg.replace(attention_impl="naive")
+    key = jax.random.PRNGKey(14)
+    params, _ = A.init_attention(key, cfg, jnp.float32)
+    B, W = 1, cfg.local_window
+    T = W + 6                                  # force wraparound
+    x = jax.random.normal(jax.random.PRNGKey(15), (B, T, cfg.d_model))
+    pos = jnp.broadcast_to(jnp.arange(T), (B, T))
+    full, _ = A.attention_layer(x, params, cfg, pos, window=W)
+
+    cache = A.init_cache(cfg, B, max_len=T, window=W, dtype=jnp.float32)
+    outs = []
+    for t in range(T):
+        o, cache = A.attention_layer(
+            x[:, t:t + 1], params, cfg, pos[:, t:t + 1],
+            cache=cache, window=W)
+        outs.append(o)
+    step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(step), np.asarray(full),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,66 @@
+"""PMI KVS semantics: put/fence/get, generations, watchdog."""
+import threading
+import time
+
+import pytest
+
+from repro.core import KeyValueSpace, PMIClient, PMIServer, Watchdog
+from repro.core.pmi import PMIError
+
+
+def test_kvs_get_before_fence_raises():
+    kvs = KeyValueSpace()
+    kvs.put(0, "addr/0", "a:1")
+    with pytest.raises(PMIError):
+        kvs.get("addr/0")
+    kvs.commit_all()
+    assert kvs.get("addr/0") == "a:1"
+
+
+def test_threaded_wireup_fence():
+    """The paper's rank wire-up: every worker puts its endpoint, fences,
+    then reads every other endpoint — race-free by the fence contract."""
+    server = PMIServer(world_size=4)
+    clients = [PMIClient(server, f"w{i}") for i in range(4)]
+    results: dict[int, list[str]] = {}
+
+    def worker(c: PMIClient):
+        c.put(f"addr/{c.rank}", f"host{c.rank}:94{c.rank}0")
+        c.fence(timeout=5)
+        results[c.rank] = [c.get(f"addr/{r}") for r in range(4)]
+
+    threads = [threading.Thread(target=worker, args=(c,)) for c in clients]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=10)
+    assert len(results) == 4
+    for r in range(4):
+        assert results[r] == [f"host{i}:94{i}0" for i in range(4)]
+
+
+def test_generation_bump_on_failure():
+    server = PMIServer(world_size=3)
+    clients = [PMIClient(server, f"w{i}") for i in range(3)]
+    assert [c.rank for c in clients] == [0, 1, 2]
+    gen = server.fail_worker("w1")
+    assert gen == 1
+    alive = server.alive_workers()
+    assert [w.worker_id for w in alive] == ["w0", "w2"]
+    assert [w.rank for w in alive] == [0, 1]       # dense re-rank
+
+
+def test_watchdog_detects_stale_heartbeat():
+    server = PMIServer(world_size=2, heartbeat_timeout=0.2)
+    PMIClient(server, "w0")
+    PMIClient(server, "w1")
+    failures: list[list[str]] = []
+    dog = Watchdog(server, interval=0.05, on_failure=failures.append)
+    dog.start()
+    t_end = time.monotonic() + 1.0
+    while time.monotonic() < t_end and not failures:
+        server.heartbeat("w0")      # only w0 stays alive
+        time.sleep(0.05)
+    dog.stop()
+    assert failures and failures[0] == ["w1"]
+    assert server.generation == 1

@@ -1,0 +1,108 @@
+"""RDD middleware: transforms, lineage fault tolerance, stragglers."""
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Context, FailureInjector, PartitionLostError
+from repro.core.rdd import TaskScheduler
+
+
+def test_map_filter_collect():
+    ctx = Context()
+    rdd = ctx.parallelize(range(100), 7)
+    assert rdd.map(lambda x: x * 2).collect() == [2 * x for x in range(100)]
+    assert rdd.filter(lambda x: x % 3 == 0).collect() == \
+        [x for x in range(100) if x % 3 == 0]
+    assert rdd.count() == 100
+
+
+def test_union_preserves_partitions():
+    ctx = Context()
+    a = ctx.parallelize(range(10), 2)
+    b = ctx.parallelize(range(10, 30), 3)
+    u = a.union(b)
+    assert u.num_partitions == 5
+    assert sorted(u.collect()) == list(range(30))
+
+
+def test_repartition_is_wide():
+    ctx = Context()
+    rdd = ctx.parallelize(range(20), 4).repartition(3)
+    assert rdd.num_partitions == 3
+    assert sorted(rdd.collect()) == list(range(20))
+    assert len(rdd.lineage()) == 2
+
+
+def test_zip_partitions():
+    ctx = Context()
+    a = ctx.from_partitions([np.arange(3), np.arange(3, 6)])
+    b = ctx.from_partitions([np.ones(3), np.ones(3)])
+    z = a.zip_partitions(b, lambda x, y: x + y)
+    got = z.collect_partitions()
+    np.testing.assert_array_equal(got[0], [1, 2, 3])
+    np.testing.assert_array_equal(got[1], [4, 5, 6])
+
+
+def test_reduce():
+    ctx = Context()
+    assert ctx.parallelize(range(10), 3).reduce(lambda a, b: a + b) == 45
+
+
+@given(st.lists(st.integers(-100, 100), min_size=1, max_size=60),
+       st.integers(1, 8))
+@settings(max_examples=25, deadline=None)
+def test_property_partitioning_preserves_data(data, nparts):
+    """Any partitioning of any data collects back to the original list."""
+    ctx = Context()
+    rdd = ctx.parallelize(data, min(nparts, len(data)))
+    assert rdd.collect() == data
+    assert rdd.map(lambda x: x + 1).collect() == [x + 1 for x in data]
+
+
+def test_lineage_recompute_on_injected_failure():
+    """A partition that fails twice is recomputed from lineage and the job
+    still returns the right answer (the RDD resilience contract)."""
+    inj = FailureInjector(fail={1: 2})
+    ctx = Context(scheduler=TaskScheduler(num_executors=2, max_failures=4,
+                                          failure_injector=inj))
+    rdd = ctx.parallelize(range(30), 3).map(lambda x: x * x)
+    assert rdd.collect() == [x * x for x in range(30)]
+    assert ctx.scheduler.metrics["retries"] == 2
+
+
+def test_unrecoverable_failure_raises():
+    inj = FailureInjector(fail={0: 99})
+    ctx = Context(scheduler=TaskScheduler(num_executors=2, max_failures=2,
+                                          failure_injector=inj))
+    with pytest.raises(RuntimeError, match="failed"):
+        ctx.parallelize(range(4), 2).collect()
+
+
+def test_cached_partition_loss_recomputes():
+    ctx = Context()
+    calls = []
+    base = ctx.parallelize(range(10), 2)
+    traced = base.map_partitions_with_index(
+        lambda i, part: (calls.append(i), part)[1]).cache()
+    traced.collect()
+    assert sorted(calls) == [0, 1]
+    traced.unpersist_partition(1)          # simulate node loss
+    traced.collect()
+    assert sorted(calls) == [0, 1, 1]      # only partition 1 recomputed
+
+
+def test_speculative_execution_beats_straggler():
+    inj = FailureInjector(slow={0: 1.2})
+    sched = TaskScheduler(num_executors=4, speculation=True,
+                          speculation_multiplier=3.0,
+                          speculation_quantile=0.25,
+                          failure_injector=inj)
+    ctx = Context(scheduler=sched)
+    t0 = time.monotonic()
+    out = ctx.parallelize(range(40), 8).map(lambda x: x + 1).collect()
+    dt = time.monotonic() - t0
+    assert out == [x + 1 for x in range(40)]
+    assert sched.metrics["speculative"] >= 1
+    assert dt < 1.1     # the speculative copy finished before the straggler
