@@ -1,0 +1,26 @@
+# Tier-1 verify and friends. `make test` is the command the driver runs;
+# keeping it here means an environment failure mode (missing dev dep,
+# wrong PYTHONPATH) surfaces as a red make target, not a silent skip.
+
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test test-data bench examples deps-check
+
+test:           ## tier-1: full suite, stop at first failure
+	$(PYTHON) -m pytest -x -q
+
+test-data:      ## just the data subsystem
+	$(PYTHON) -m pytest -q tests/test_data_sources.py tests/test_data_sinks.py \
+	    tests/test_data_window.py tests/test_broker_dstream.py
+
+bench:          ## CSV benchmark sweep (includes bench_ingest)
+	$(PYTHON) -m benchmarks.run
+
+examples:       ## fast end-to-end example runs
+	$(PYTHON) examples/ptycho_pipeline.py --fast
+	$(PYTHON) examples/tomo_pipeline.py --nray 32 --nslice 16
+
+deps-check:     ## verify runtime imports resolve (no installs performed)
+	$(PYTHON) -c "import jax, numpy, scipy; print('runtime deps ok')"
+	-$(PYTHON) -c "import hypothesis; print('hypothesis ok')"

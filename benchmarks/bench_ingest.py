@@ -1,0 +1,93 @@
+"""Ingest path: source -> broker -> micro-batch throughput, and backpressure
+behavior under overload (the near-real-time criterion stressed past its
+breaking point instead of only at the happy path).
+
+Three measurements:
+  1. ingest/source_to_batch — raw records/s through SyntheticRateSource ->
+     IngestRunner -> broker -> StreamingContext micro-batches.
+  2. ingest/backpressure_drop — a rate-limited (slow) pipeline fed ~10x over
+     capacity with the drop policy: lag stays bounded, overload is shed.
+  3. ingest/backpressure_sample — same overload with the sample policy: the
+     stream thins (every k-th record survives) but stays ordered and bounded.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, time_call
+
+
+def _throughput(records: int, batch: int) -> None:
+    from repro.core import Broker, Context, StreamingContext
+    from repro.data import IngestConfig, IngestRunner, SyntheticRateSource
+
+    def once() -> None:
+        broker = Broker()
+        sc = StreamingContext(Context(), broker,
+                              max_records_per_partition=batch // 2)
+        runner = IngestRunner(broker, consumer=sc)
+        src = SyntheticRateSource(rate=1e9, total=records)
+        runner.add(src, IngestConfig(topic="t", partitions=2,
+                                     poll_batch=batch))
+        sc.subscribe(["t"])
+        sc.foreach_batch(lambda rdd, info: rdd.count())
+        runner.start()
+        while not runner.done or sc.lag("t") > 0:
+            if sc.run_one_batch() is None:
+                time.sleep(0.0005)
+        runner.stop()
+        assert sum(b.num_records for b in sc.history) == records
+
+    sec = time_call(once, repeats=3)
+    emit("ingest/source_to_batch", sec / records,
+         f"{records} records end-to-end in {sec:.3f}s; "
+         f"throughput {records / sec:.0f} rec/s")
+
+
+def _backpressure(policy: str, records: int = 2000,
+                  capacity_rec_s: float = 4000.0) -> None:
+    """Overloaded pipeline: source produces ~10x what the consumer sustains.
+    Graceful degradation = bounded lag + shed/thinned load, not an unbounded
+    queue."""
+    from repro.core import Broker, Context, StreamingContext
+    from repro.data import IngestConfig, IngestRunner, SyntheticRateSource
+
+    broker = Broker()
+    per_batch = 32
+    sc = StreamingContext(Context(), broker,
+                          max_records_per_partition=per_batch)
+    runner = IngestRunner(broker, consumer=sc)
+    src = SyntheticRateSource(rate=1e9, total=records)
+    cfg = IngestConfig(topic="t", policy=policy, max_pending=128,
+                       poll_batch=64, sample_stride=8)
+    m = runner.add(src, cfg)
+    sc.subscribe(["t"])
+    # consumer capacity: sleep to simulate per-batch processing cost
+    sc.foreach_batch(lambda rdd, info:
+                     time.sleep(per_batch / capacity_rec_s))
+    t0 = time.perf_counter()
+    runner.start()
+    max_lag = 0
+    while not runner.done or sc.lag("t") > 0:
+        max_lag = max(max_lag, sc.lag("t"))
+        if sc.run_one_batch() is None:
+            time.sleep(0.0005)
+    runner.stop()
+    sec = time.perf_counter() - t0
+    bound = cfg.max_pending + cfg.poll_batch
+    shed = m.dropped + m.sampled_out
+    emit(f"ingest/backpressure_{policy}", sec,
+         f"{records} offered, {m.produced} delivered, {shed} shed; "
+         f"max lag {max(max_lag, m.max_observed_lag)} (bound {bound}); "
+         f"graceful={max(max_lag, m.max_observed_lag) <= bound and shed > 0}")
+
+
+def run(records: int = 20000, batch: int = 200) -> None:
+    _throughput(records, batch)
+    _backpressure("drop")
+    _backpressure("sample")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -4,6 +4,7 @@
   Table II -> bench_ptycho      (RAAR solver scaling)
   Fig. 16  -> bench_tomo        (ART scaling + TomViz baseline)
   Fig. 7-8 -> bench_streaming   (micro-batch pipeline overhead)
+  §V       -> bench_ingest      (source->batch throughput + backpressure)
 
 Prints ``name,us_per_call,derived`` CSV. Roofline numbers for the LM cells
 come from the dry-run artifacts (launch/roofline.py), not from here.
@@ -15,9 +16,10 @@ import traceback
 
 def main() -> None:
     print("name,us_per_call,derived")
-    from benchmarks import (bench_allreduce, bench_ptycho, bench_streaming,
-                            bench_tomo)
-    for mod in (bench_allreduce, bench_ptycho, bench_tomo, bench_streaming):
+    from benchmarks import (bench_allreduce, bench_ingest, bench_ptycho,
+                            bench_streaming, bench_tomo)
+    for mod in (bench_allreduce, bench_ptycho, bench_tomo, bench_streaming,
+                bench_ingest):
         try:
             mod.run()
         except Exception:

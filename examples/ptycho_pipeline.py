@@ -1,12 +1,17 @@
 """End-to-end near-real-time ptychography pipeline (paper §III, Figs. 7-10).
 
-The full Spark-MPI loop:
-  detector simulator --> broker topic (frames at the acquisition rate)
-     --> StreamingContext micro-batches (per-topic RDDs, union)
+The full Spark-MPI loop, on the data subsystem:
+  DetectorSource (frame simulator at the acquisition rate)
+     --> broker topic --> StreamingContext micro-batches
      --> RAAR reconstruction on accumulated frames (the "MPI application":
          modulus + overlap + combine, Pallas kernels; partial sums psum
          across the worker mesh when world > 1)
-     --> sinks: live Fourier-error metric + final phase image (Fig. 10)
+     --> sinks: NpzDirectorySink artifacts + MetricsSink latency accounting
+         + final phase image (Fig. 10)
+
+No hand-rolled producer thread and no direct ``broker.produce`` calls: the
+pipeline pulls the detector through ``subscribe_source`` and pushes results
+through idempotent keyed sinks.
 
 The paper's near-real-time criterion: 512 frames arrive in ~25 s; the
 pipeline reports whether reconstruction kept pace.
@@ -18,7 +23,6 @@ Run:  PYTHONPATH=src python examples/ptycho_pipeline.py \
 import argparse
 import os
 import sys
-import threading
 import time
 
 import jax
@@ -31,7 +35,8 @@ from repro.apps.ptycho.sim import simulate
 from repro.apps.ptycho.solver import (SolverConfig, init_waves, raar_step,
                                       reconstruction_quality)
 from repro.apps.tomo.render import render_phase
-from repro.core import Broker, Context, StreamingContext
+from repro.core import Broker, NearRealTimePipeline, PipelineConfig
+from repro.data import DetectorSource, MetricsSink, NpzDirectorySink
 
 
 def main() -> None:
@@ -59,16 +64,10 @@ def main() -> None:
     print(f"scan: {problem.num_frames} frames of "
           f"{problem.frame_shape}; streaming {n_frames}")
 
-    broker = Broker()
-    broker.create_topic("frames", partitions=2)
-    done = threading.Event()
-
-    def detector() -> None:
-        for j in range(n_frames):
-            broker.produce("frames", j, partition=j % 2)
-            if args.frame_interval:
-                time.sleep(args.frame_interval)
-        done.set()
+    source = DetectorSource(problem, max_frames=n_frames,
+                            frame_interval=args.frame_interval)
+    artifact_sink = NpzDirectorySink(os.path.join(args.out, "ptycho"))
+    metrics = MetricsSink()
 
     # reconstruction state (solver warm-starts across micro-batches)
     cfg = SolverConfig(beta=0.75, iterations=args.final_iters,
@@ -82,12 +81,7 @@ def main() -> None:
     step = jax.jit(lambda psi, mag, pos, probe, it: raar_step(
         psi, mag, pos, probe, obj_shape, cfg, it))
 
-    ctx = Context()
-    sc = StreamingContext(ctx, broker, batch_interval=0.05,
-                          max_records_per_partition=args.batch_frames // 2)
-    sc.subscribe(["frames"])
-
-    def on_batch(rdd, info):
+    def process(rdd, info, bridge):
         ids = sorted(rdd.collect())
         if not ids:
             return None
@@ -110,17 +104,22 @@ def main() -> None:
         print(f"  batch {info.index}: {n_new}/{n_frames} frames, "
               f"fourier err {float(err):.4f}, "
               f"proc {info.processing_time:.2f}s")
-        return float(err)
+        # keyed result -> idempotent sink (replays overwrite, not duplicate)
+        return [(f"batch-{info.index:06d}",
+                 {"fourier_err": np.float32(err),
+                  "frames_seen": np.int32(n_new)})]
 
-    sc.foreach_batch(on_batch)
+    pipeline = NearRealTimePipeline(
+        Broker(),
+        PipelineConfig(batch_interval=0.05,
+                       max_records_per_partition=args.batch_frames // 2,
+                       source_partitions=2),
+        process,
+        sinks=[artifact_sink, metrics])
+    pipeline.subscribe_source(source, topic="frames")
+
     t0 = time.time()
-    threading.Thread(target=detector, daemon=True).start()
-    while state["n_seen"] < n_frames:
-        if sc.run_one_batch() is None:
-            if done.is_set() and broker.end_offset("frames", 0) + \
-                    broker.end_offset("frames", 1) <= state["n_seen"]:
-                break
-            time.sleep(0.01)
+    report = pipeline.run_until_drained()
     stream_time = time.time() - t0
 
     # refinement to convergence (the offline tail, paper Table II setup)
@@ -133,14 +132,22 @@ def main() -> None:
     total = time.time() - t0
     q = reconstruction_quality(obj, problem.object_true,
                                margin=args.probe_size // 2)
+    # overwrite: the final object must track THIS run, not a previous one
+    artifact_sink.write_batch([
+        ("object-final", {"obj": np.asarray(obj),
+                          "fourier_err": np.float32(err)})], overwrite=True)
     acq = 0.05 * n_frames
-    print(f"\nstreaming phase: {stream_time:.1f}s for {n_frames} frames "
-          f"({sc.realtime_report()['mean_processing_s']:.2f}s/batch)")
+    rep = metrics.report()
+    print(f"\nstreaming phase: {stream_time:.1f}s for {report.records} frames"
+          f" ({rep['mean_latency_s']:.2f}s/batch, "
+          f"{rep['throughput_rec_per_s']:.0f} rec/s)")
     print(f"total (incl. {args.final_iters} refinement iters): {total:.1f}s "
           f"vs paper acquisition window {acq:.0f}s "
           f"-> near-real-time: {total < acq}")
     print(f"final fourier error {float(err):.4f}, "
           f"phase correlation vs truth {q:.3f}")
+    print(f"sink artifacts: {len(artifact_sink.keys_on_disk())} npz files "
+          f"in {artifact_sink.directory}")
     paths = render_phase(np.asarray(obj), args.out)
     print("artifacts:", paths)
 

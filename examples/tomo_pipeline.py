@@ -1,13 +1,16 @@
-"""Tomography pipeline (paper §IV, Figs. 11-16): load -> partition -> ART ->
-gather -> render.
+"""Tomography pipeline (paper §IV, Figs. 11-16): stream -> partition -> ART ->
+gather -> render, on the data subsystem.
 
-The four paper steps, on the RDD layer with speculative-execution enabled:
-  1. the TEM tilt series loads into an RDD (slicewise records);
-  2. repartition groups neighbouring slices (paper step 2);
-  3. every partition runs the ART sweep (Pallas kernel) in parallel —
+The paper's four steps, streamed instead of preloaded:
+  1. the TEM tilt series arrives as slice records through a
+     ProjectionSource (paper: "load the TEM dataset into RDD format");
+  2. each micro-batch groups neighbouring slices (paper step 2 —
+     repartition by proximity; slices stream in scan order);
+  3. every batch runs the ART sweep (Pallas kernel) partition-parallel —
      the scheduler retries failures and re-executes stragglers;
-  4. sub-volumes gather on the driver and render to PNG/NPY (the
-     ParaView/ParaViewWeb stage, stubbed per DESIGN.md).
+  4. sub-volumes land in an idempotent NpzDirectorySink (checkpoint store),
+     assemble, and render to PNG/NPY (the ParaView/ParaViewWeb stage,
+     stubbed per DESIGN.md).
 
 Run:  PYTHONPATH=src python examples/tomo_pipeline.py --nray 64 --nslice 32
 """
@@ -23,8 +26,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from repro.apps.tomo.render import render_volume
 from repro.apps.tomo.solver import (TomoConfig, reconstruct_slices, residual,
                                     simulate_tilt_series)
-from repro.core import Context
+from repro.core import Broker, Context, NearRealTimePipeline, PipelineConfig
 from repro.core.rdd import TaskScheduler
+from repro.data import MetricsSink, NpzDirectorySink, ProjectionSource
 
 
 def main() -> None:
@@ -34,6 +38,8 @@ def main() -> None:
     ap.add_argument("--angles", type=int, default=25)
     ap.add_argument("--iterations", type=int, default=2)
     ap.add_argument("--partitions", type=int, default=4)
+    ap.add_argument("--slice-interval", type=float, default=0.0,
+                    help="seconds between streamed slices (acquisition rate)")
     ap.add_argument("--out", default="out")
     args = ap.parse_args()
 
@@ -42,37 +48,69 @@ def main() -> None:
         angles=tuple(np.linspace(-75, 75, args.angles).tolist()),
         iterations=args.iterations, use_pallas=False)
 
-    # step 1: "load the TEM dataset into RDD format"
+    # step 1: the tilt series streams in as (slice_index, sinogram_row)
     vol_true, sino = simulate_tilt_series(cfg, args.nslice)
+    source = ProjectionSource(sino, interval=args.slice_interval)
+    # per-run-shape directory: the gather below reads every key on disk, so
+    # sub-volumes from a differently-shaped run must not share the store
+    # (same-shape reruns resume idempotently, which is the point)
+    run_tag = f"{args.nslice}x{args.nray}x{args.angles}x{args.iterations}"
+    sink = NpzDirectorySink(os.path.join(args.out,
+                                         f"tomo_subvolumes_{run_tag}"))
+    metrics = MetricsSink()
     ctx = Context(scheduler=TaskScheduler(num_executors=args.partitions,
                                           speculation=True))
-    records = [(i, sino[i]) for i in range(args.nslice)]
-    rdd = ctx.parallelize(records, args.partitions)
+    batch_slices = max(1, args.nslice // args.partitions)
 
-    # step 2: repartition so neighbouring slices share a partition
-    rdd = rdd.repartition(args.partitions)
+    # steps 2+3 per micro-batch: repartition neighbouring slices, ART sweep
+    def process(rdd, info, bridge):
+        records = sorted(rdd.collect())          # (i, row), scan order
+        if not records:
+            return None
+        part = ctx.parallelize(records, min(args.partitions, len(records)))
 
-    # step 3: ART on each partition in parallel
-    def process_partition(items):
-        idx = [i for i, _ in items]
-        block = np.stack([b for _, b in items])
-        return idx, reconstruct_slices(block, cfg)
+        def art_sweep(items):
+            idx = [i for i, _ in items]
+            block = np.stack([b for _, b in items])
+            return idx, reconstruct_slices(block, cfg)
+
+        parts = part.map_partitions(art_sweep).collect_partitions()
+        out = []
+        for idx, block in parts:
+            key = f"slices-{idx[0]:04d}-{idx[-1]:04d}"
+            out.append((key, {"idx": np.asarray(idx, np.int64),
+                              "block": block}))
+        return out
+
+    pipeline = NearRealTimePipeline(
+        Broker(),
+        PipelineConfig(batch_interval=0.02,
+                       max_records_per_partition=batch_slices),
+        process,
+        context=ctx,
+        sinks=[sink, metrics])
+    pipeline.subscribe_source(source, topic="tilt-series")
 
     t0 = time.time()
-    parts = rdd.map_partitions(process_partition).collect_partitions()
-    recon = np.zeros((args.nslice, args.nray, args.nray), np.float32)
-    for idx, block in parts:
-        recon[idx] = block
+    pipeline.run_until_drained()
     dt = time.time() - t0
 
-    # step 4: gather + render
+    # step 4: gather sub-volumes from the checkpoint store + render
+    recon = np.zeros((args.nslice, args.nray, args.nray), np.float32)
+    for key in sink.keys_on_disk():
+        with np.load(sink.path_for(key)) as z:
+            recon[z["idx"]] = z["block"]
     r = residual(recon, sino, cfg)
     err = np.linalg.norm(recon - vol_true) / np.linalg.norm(vol_true)
+    rep = metrics.report()
     print(f"ART: {args.nslice} slices x {args.nray}^2, "
           f"{args.angles} angles, {args.iterations} sweeps "
-          f"on {args.partitions} partitions: {dt:.1f}s")
+          f"on {args.partitions} partitions: {dt:.1f}s "
+          f"({rep['batches']} micro-batches, "
+          f"{rep['throughput_rec_per_s']:.1f} slices/s)")
     print(f"sinogram residual {r:.3f}; volume rel. error {err:.3f}")
     print(f"scheduler metrics: {ctx.scheduler.metrics}")
+    print(f"sub-volume artifacts: {sink.keys_on_disk()}")
     paths = render_volume(recon, args.out)
     print("artifacts:", paths)
 

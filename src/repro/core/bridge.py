@@ -37,7 +37,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.pmi import PMIClient, PMIServer
 from repro.core.rdd import RDD, Context
-from repro.utils import get_logger
+from repro.utils import get_logger, make_mesh_compat, shard_map_compat
 
 log = get_logger(__name__)
 
@@ -45,9 +45,7 @@ log = get_logger(__name__)
 def make_worker_mesh(devices: Sequence[jax.Device] | None = None,
                      axis_name: str = "workers") -> Mesh:
     devs = list(devices) if devices is not None else jax.devices()
-    return jax.make_mesh((len(devs),), (axis_name,),
-                         axis_types=(jax.sharding.AxisType.Auto,),
-                         devices=devs)
+    return make_mesh_compat((len(devs),), (axis_name,), devices=devs)
 
 
 class MPIBridge:
@@ -100,8 +98,8 @@ class MPIBridge:
         any ``jax.lax`` collective with ``axis_name``."""
         in_specs = P(self.axis_name)
         out_specs = P(self.axis_name) if out_specs is None else out_specs
-        sm = jax.shard_map(fn, mesh=self.mesh,
-                           in_specs=in_specs, out_specs=out_specs)
+        sm = shard_map_compat(fn, mesh=self.mesh,
+                              in_specs=in_specs, out_specs=out_specs)
         return jax.jit(sm)
 
     def run(self, rdd: RDD, fn: Callable[..., Any],

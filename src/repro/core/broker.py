@@ -12,7 +12,10 @@ transport-shaped: producers append, consumers poll by (topic, partition,
 offset), and nothing downstream (DStream scheduler, bridge, solvers) can tell
 the difference. The paper's own future-work item — "augment the Kafka
 Receiver with interfaces to other data sources, such as ZeroMQ" — is the
-``Source`` protocol in ``data/sources.py``.
+:class:`repro.data.sources.Source` protocol: concrete sources (detector,
+tilt-series, file replay, synthetic rate, topic re-ingest) are pumped into
+broker topics by :class:`repro.data.ingest.IngestRunner` (threaded, with
+backpressure) or inline via ``StreamingContext.subscribe_source``.
 """
 from __future__ import annotations
 

@@ -75,6 +75,9 @@ class StreamingContext:
         self._decoder: Callable[[Any], Any] | None = None
         self._batch_fn: Callable[[RDD, BatchInfo], Any] | None = None
         self._sinks: list[Callable[[BatchInfo], None]] = []
+        # pull-model sources pumped inline before each micro-batch:
+        # (source, topic, poll_batch)
+        self._sources: list[tuple[Any, str, int]] = []
         self._progress = (StreamProgress.load(checkpoint_path)
                           if checkpoint_path else StreamProgress())
         self._history: list[BatchInfo] = []
@@ -85,17 +88,61 @@ class StreamingContext:
     # -- wiring -------------------------------------------------------------
     def subscribe(self, topics: Sequence[str],
                   value_decoder: Callable[[Any], Any] | None = None) -> None:
-        self._topics = list(topics)
-        self._decoder = value_decoder
+        self._topics.extend(t for t in topics if t not in self._topics)
+        if value_decoder is not None:
+            self._decoder = value_decoder
         for t in self._topics:
             self._progress.offsets.setdefault(
                 t, [0] * self.broker.num_partitions(t))
+
+    def subscribe_source(self, source: Any, topic: str | None = None,
+                         partitions: int = 1,
+                         poll_batch: int | None = None) -> str:
+        """Subscribe a :class:`repro.data.sources.Source` directly.
+
+        Creates ``topic`` if missing (default: ``source-<i>``), subscribes to
+        it, and pumps the source inline before each micro-batch — the
+        pull-model twin of :class:`repro.data.ingest.IngestRunner`, fully
+        deterministic for tests and single-process pipelines. If the source
+        is replayable, it is ``seek``-ed to the topic's current end offset so
+        a restart (offsets reloaded from checkpoint) does not re-produce
+        records the broker already has.
+        """
+        topic = topic or f"source-{len(self._sources)}"
+        if topic not in self.broker.topics():
+            self.broker.create_topic(topic, partitions)
+        if hasattr(source, "seek"):
+            source.seek(sum(self.broker.end_offsets(topic)))
+        self.subscribe([topic])
+        if poll_batch is not None:
+            n = poll_batch
+        elif self.max_records_per_partition is not None:
+            # the consumer cap is per partition; pump enough to fill them all
+            n = self.max_records_per_partition * partitions
+        else:
+            n = 64
+        self._sources.append((source, topic, n))
+        return topic
 
     def foreach_batch(self, fn: Callable[[RDD, BatchInfo], Any]) -> None:
         self._batch_fn = fn
 
     def add_sink(self, fn: Callable[[BatchInfo], None]) -> None:
         self._sinks.append(fn)
+
+    # -- consumer-side accounting ------------------------------------------
+    def committed(self, topic: str) -> int:
+        """Total records committed (processed) for a topic."""
+        return sum(self._progress.offsets.get(topic, []))
+
+    def lag(self, topic: str) -> int:
+        """Produced-but-unprocessed records — the backpressure signal
+        :class:`repro.data.ingest.IngestRunner` bounds."""
+        return sum(self.broker.end_offsets(topic)) - self.committed(topic)
+
+    @property
+    def sources_exhausted(self) -> bool:
+        return all(s.exhausted for s, _, _ in self._sources)
 
     @property
     def history(self) -> list[BatchInfo]:
@@ -114,8 +161,22 @@ class StreamingContext:
                     ranges.append(OffsetRange(topic, p, start, end))
         return ranges
 
+    def _pump_sources(self) -> None:
+        rr = {t: 0 for _, t, _ in self._sources}
+        for source, topic, n in self._sources:
+            if source.exhausted:
+                continue
+            parts = self.broker.num_partitions(topic)
+            for key, value in source.poll(n):
+                self.broker.produce(topic, value, key=key,
+                                    partition=rr[topic] % parts,
+                                    timestamp=time.monotonic())
+                rr[topic] += 1
+
     def run_one_batch(self) -> BatchInfo | None:
         """Paper Fig. 8 ``run_batch``: per-topic RDDs, union, process."""
+        if self._sources:
+            self._pump_sources()
         ranges = self._pending_ranges()
         if not ranges:
             return None

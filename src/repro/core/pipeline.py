@@ -27,11 +27,12 @@ log = get_logger(__name__)
 
 @dataclass
 class PipelineConfig:
-    topics: Sequence[str]
+    topics: Sequence[str] = ()
     batch_interval: float = 0.1
     max_records_per_partition: int | None = None
     checkpoint_path: str | None = None
     value_decoder: Callable[[Any], Any] | None = None
+    source_partitions: int = 1     # topic partitions for subscribed sources
 
 
 @dataclass
@@ -65,7 +66,9 @@ class NearRealTimePipeline:
     def __init__(self, broker: Broker, config: PipelineConfig,
                  process: Callable[[RDD, BatchInfo, MPIBridge], Any],
                  bridge: MPIBridge | None = None,
-                 context: Context | None = None) -> None:
+                 context: Context | None = None,
+                 sources: Sequence[Any] = (),
+                 sinks: Sequence[Any] = ()) -> None:
         self.broker = broker
         self.config = config
         self.context = context or Context()
@@ -73,17 +76,36 @@ class NearRealTimePipeline:
         self.report = PipelineReport()
         self._process = process
         self._sinks: list[Callable[[BatchInfo], None]] = []
+        self._keyed_sinks: list[Any] = []
         self.streaming = StreamingContext(
             self.context, broker,
             batch_interval=config.batch_interval,
             max_records_per_partition=config.max_records_per_partition,
             checkpoint_path=config.checkpoint_path)
         self.streaming.subscribe(config.topics, config.value_decoder)
+        for src in sources:
+            self.subscribe_source(src)
         self.streaming.foreach_batch(self._on_batch)
         self.streaming.add_sink(self._on_sink)
+        for sink in sinks:
+            self.add_sink(sink)
 
-    def add_sink(self, fn: Callable[[BatchInfo], None]) -> None:
-        self._sinks.append(fn)
+    def subscribe_source(self, source: Any, topic: str | None = None) -> str:
+        """Feed the pipeline from a :class:`repro.data.sources.Source`."""
+        return self.streaming.subscribe_source(
+            source, topic=topic, partitions=self.config.source_partitions)
+
+    def add_sink(self, sink: Any) -> None:
+        """Accept either a plain ``fn(BatchInfo)`` or a keyed
+        :class:`repro.data.sinks.Sink` (``write_batch``): keyed sinks get the
+        batch result normalized to ``(key, value)`` items, so their per-key
+        idempotence upgrades replay to exactly-once."""
+        if hasattr(sink, "observe"):        # batch-level metrics sink
+            self._sinks.append(sink.observe)
+        if hasattr(sink, "write_batch"):
+            self._keyed_sinks.append(sink)
+        elif not hasattr(sink, "observe"):
+            self._sinks.append(sink)
 
     def _on_batch(self, rdd: RDD, info: BatchInfo) -> Any:
         return self._process(rdd, info, self.bridge)
@@ -94,15 +116,25 @@ class NearRealTimePipeline:
         self.report.batch_latencies.append(info.processing_time)
         for sink in self._sinks:
             sink(info)
+        if self._keyed_sinks:
+            from repro.data.sinks import describe_result_items
+            items = describe_result_items(info.result, info.index)
+            for sink in self._keyed_sinks:
+                sink.write_batch(items)
 
     # -- drive ----------------------------------------------------------------
     def run(self, max_batches: int, wait_for_data: float = 1.0) -> PipelineReport:
         self.streaming.run_batches(max_batches, wait_for_data=wait_for_data)
         return self.report
 
-    def run_until_drained(self, producer_done: Callable[[], bool],
+    def run_until_drained(self, producer_done: Callable[[], bool] | None = None,
                           idle_timeout: float = 2.0) -> PipelineReport:
-        """Process batches until the producer finished AND the topics drained."""
+        """Process batches until the producer finished AND the topics drained.
+
+        With subscribed sources, ``producer_done`` defaults to "every source
+        exhausted"."""
+        if producer_done is None:
+            producer_done = lambda: self.streaming.sources_exhausted  # noqa: E731
         last_data = time.monotonic()
         while True:
             info = self.streaming.run_one_batch()

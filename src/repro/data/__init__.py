@@ -1,0 +1,54 @@
+"""Data ingestion & sink subsystem: sources → ingest → windows → sinks.
+
+This package is the paper's future-work item made real — "augment the Kafka
+Receiver with interfaces to other data sources" — shaped after DELTA's
+generator/reader/backend split. Map from class to concept:
+
+================================  =============================================
+Class                             Reproduces
+================================  =============================================
+``sources.Source``                Kafka Receiver / DELTA reader: pollable
+                                  ``(key, value)`` record stream
+``sources.DetectorSource``        paper §III ptychography detector (frame
+                                  simulator fronted as a stream)
+``sources.ProjectionSource``      paper §IV TEM tilt series, slice records
+``sources.FileReplaySource``      DELTA ``sources/dataloader.py``: replay a
+                                  capture from disk, deterministically
+``sources.SyntheticRateSource``   clocked load generator (rate in records/s)
+``sources.TopicSource``           re-ingest a broker topic → multi-stage
+                                  pipelines (DELTA processor chaining)
+``ingest.IngestRunner``           DELTA ``generator.py``: pump sources into
+                                  transport, paced, with bounded-lag
+                                  backpressure (block/drop/sample)
+``window.WindowSpec/windowed``    Spark DStream ``window(length, slide)``
+                                  over micro-batches (tumbling + sliding)
+``sinks.NpzDirectorySink``        checkpoint/artifact store (idempotent files)
+``sinks.TopicSink``               DELTA backend-chaining: results → next topic
+``sinks.MetricsSink``             latency/throughput aggregation (Fig. 9/10
+                                  accounting) feeding ``PipelineReport``
+``sinks.CallbackSink``            visualization hook (ParaViewWeb stand-in)
+================================  =============================================
+
+All sinks are idempotent by key, upgrading the dstream layer's at-least-once
+replay to exactly-once end-to-end.
+"""
+from repro.data.ingest import (IngestConfig, IngestRunner, SourceMetrics,
+                               ingest_all)
+from repro.data.sinks import (CallbackSink, KeyedSink, MetricsSink,
+                              NpzDirectorySink, Sink, TopicSink,
+                              describe_result_items, fan_out)
+from repro.data.sources import (DetectorSource, FileReplaySource,
+                                ProjectionSource, ReplayableSource,
+                                SequenceSource, Source, SyntheticRateSource,
+                                TopicSource, save_npz_capture)
+from repro.data.window import WindowInfo, WindowSpec, Windower, windowed
+
+__all__ = [
+    "Source", "ReplayableSource", "SequenceSource",
+    "DetectorSource", "ProjectionSource", "FileReplaySource",
+    "SyntheticRateSource", "TopicSource", "save_npz_capture",
+    "IngestConfig", "IngestRunner", "SourceMetrics", "ingest_all",
+    "WindowSpec", "WindowInfo", "Windower", "windowed",
+    "Sink", "KeyedSink", "NpzDirectorySink", "TopicSink", "MetricsSink",
+    "CallbackSink", "describe_result_items", "fan_out",
+]

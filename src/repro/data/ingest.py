@@ -1,0 +1,232 @@
+"""Ingest runtime: pump sources into broker topics with bounded-queue
+backpressure (DELTA's generator process, minus MPI).
+
+The paper's near-real-time criterion — per-batch processing time must stay
+under the batch interval — is only meaningful if overload is *observable*.
+An unbounded broker log hides it: producers never block, consumers just fall
+further behind. :class:`IngestRunner` bounds the produced-but-unconsumed lag
+per topic and applies a policy when the bound is hit:
+
+- ``block``  — the source waits (lossless; the instrument must buffer),
+- ``drop``   — newest records are discarded (lossy, bounded lag),
+- ``sample`` — keep every k-th record (graceful degradation: the stream
+  thins instead of stalling, CFAA's approach of decimating sensor streams).
+
+Lag is measured against the consumer's committed offsets (a
+:class:`~repro.core.dstream.StreamingContext`), so backpressure reflects what
+the pipeline has actually processed, not just what it has been handed.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Sequence
+
+from repro.core.broker import Broker
+from repro.data.sources import Source
+from repro.utils import get_logger
+
+log = get_logger(__name__)
+
+POLICIES = ("block", "drop", "sample")
+
+
+@dataclass(frozen=True)
+class IngestConfig:
+    """Per-source ingest knobs."""
+    topic: str
+    partitions: int = 1            # topic created with this many if missing
+    poll_batch: int = 64           # max records per source poll
+    policy: str = "block"          # block | drop | sample when over max_pending
+    # Bound on produced-but-unconsumed records. "block" never exceeds it;
+    # "drop"/"sample" check at poll granularity, so the observed lag is
+    # bounded by max_pending + poll_batch.
+    max_pending: int = 1024
+    sample_stride: int = 4         # "sample": keep 1 of every stride records
+    rate_limit: float | None = None  # producer-side cap, records/s
+
+    def __post_init__(self) -> None:
+        if self.policy not in POLICIES:
+            raise ValueError(f"policy {self.policy!r} not in {POLICIES}")
+
+
+@dataclass
+class SourceMetrics:
+    """Per-source throughput/lag accounting."""
+    topic: str = ""
+    produced: int = 0
+    dropped: int = 0
+    sampled_out: int = 0
+    polls: int = 0
+    blocked_s: float = 0.0
+    started_at: float = 0.0
+    last_produce_at: float = 0.0
+    max_observed_lag: int = 0
+
+    @property
+    def throughput(self) -> float:
+        """Records/s over the active window (0 before any produce)."""
+        dt = self.last_produce_at - self.started_at
+        return self.produced / dt if dt > 0 else 0.0
+
+    def as_dict(self) -> dict:
+        return {"topic": self.topic, "produced": self.produced,
+                "dropped": self.dropped, "sampled_out": self.sampled_out,
+                "polls": self.polls, "blocked_s": round(self.blocked_s, 4),
+                "throughput_rec_per_s": round(self.throughput, 1),
+                "max_observed_lag": self.max_observed_lag}
+
+
+@dataclass
+class _Entry:
+    source: Source
+    config: IngestConfig
+    metrics: SourceMetrics
+    rr: int = 0                    # round-robin partition cursor
+
+
+class IngestRunner:
+    """Pumps N sources into broker topics, on a thread or inline.
+
+    ``lag_of(topic)`` reports produced-but-unconsumed records; pass
+    ``consumer=StreamingContext`` to derive it from committed offsets, or a
+    custom callable. With neither, lag is always 0 and backpressure is off.
+    """
+
+    def __init__(self, broker: Broker, consumer=None,
+                 lag_of: Callable[[str], int] | None = None,
+                 idle_sleep: float = 0.002) -> None:
+        self.broker = broker
+        if lag_of is not None:
+            self._lag_of = lag_of
+        elif consumer is not None:
+            self._lag_of = consumer.lag
+        else:
+            self._lag_of = lambda topic: 0
+        self._entries: list[_Entry] = []
+        self._idle_sleep = idle_sleep
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+
+    def add(self, source: Source, config: IngestConfig) -> SourceMetrics:
+        if config.topic not in self.broker.topics():
+            self.broker.create_topic(config.topic, config.partitions)
+        m = SourceMetrics(topic=config.topic)
+        self._entries.append(_Entry(source, config, m))
+        return m
+
+    @property
+    def metrics(self) -> list[SourceMetrics]:
+        return [e.metrics for e in self._entries]
+
+    @property
+    def done(self) -> bool:
+        return all(e.source.exhausted for e in self._entries)
+
+    # -- one pump step -----------------------------------------------------
+    def _produce(self, e: _Entry, records) -> None:
+        logs_n = self.broker.num_partitions(e.config.topic)
+        now = time.monotonic()
+        for key, value in records:
+            self.broker.produce(e.config.topic, value, key=key,
+                                partition=e.rr % logs_n, timestamp=now)
+            e.rr += 1
+        e.metrics.produced += len(records)
+        if records:
+            e.metrics.last_produce_at = now
+
+    def _pump_one(self, e: _Entry) -> int:
+        """Poll one source once, apply rate limit + backpressure policy.
+        Returns records produced (for idle detection)."""
+        src, cfg, m = e.source, e.config, e.metrics
+        if src.exhausted:
+            return 0
+        if m.started_at == 0.0:
+            m.started_at = time.monotonic()
+        want = cfg.poll_batch
+        if cfg.rate_limit is not None:
+            elapsed = time.monotonic() - m.started_at
+            due = int(cfg.rate_limit * elapsed) + 1
+            want = min(want, max(0, due - m.produced))
+            if want == 0:
+                return 0
+        lag = self._lag_of(cfg.topic)
+        m.max_observed_lag = max(m.max_observed_lag, lag)
+        room = cfg.max_pending - lag
+        if room <= 0:
+            if cfg.policy == "block":
+                m.blocked_s += self._idle_sleep
+                return 0                  # do not poll; source waits
+            records = src.poll(want)
+            m.polls += 1
+            if cfg.policy == "drop":
+                m.dropped += len(records)
+                return 0
+            # sample: thin to 1/stride, hard-capped so lag never exceeds
+            # max_pending + poll_batch even when the consumer is stalled
+            kept = records[::cfg.sample_stride]
+            hard_room = cfg.max_pending + cfg.poll_batch - lag
+            kept = kept[:max(0, hard_room)]
+            m.sampled_out += len(records) - len(kept)
+            self._produce(e, kept)
+            return len(kept)
+        if cfg.policy == "block":
+            want = min(want, room)
+        records = src.poll(want)
+        m.polls += 1
+        self._produce(e, records)
+        return len(records)
+
+    def pump(self) -> int:
+        """One round over all sources; returns total records produced."""
+        return sum(self._pump_one(e) for e in self._entries)
+
+    # -- drive -------------------------------------------------------------
+    def run_inline(self, timeout: float | None = None) -> None:
+        """Pump until every source is exhausted (tests/benchmarks)."""
+        deadline = (time.monotonic() + timeout) if timeout else None
+        while not self.done:
+            if self.pump() == 0:
+                if deadline and time.monotonic() > deadline:
+                    log.warning("ingest run_inline timed out; %d sources "
+                                "unfinished",
+                                sum(not e.source.exhausted
+                                    for e in self._entries))
+                    return
+                time.sleep(self._idle_sleep)
+
+    def start(self) -> None:
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="ingest-runner")
+        self._thread.start()
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            if self.pump() == 0:
+                if self.done:
+                    return
+                self._stop.wait(self._idle_sleep)
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=10)
+            self._thread = None
+
+    def join(self, timeout: float | None = None) -> bool:
+        """Wait for the background pump to finish all sources."""
+        if self._thread is None:
+            return self.done
+        self._thread.join(timeout)
+        return self.done
+
+
+def ingest_all(broker: Broker, pairs: Sequence[tuple[Source, IngestConfig]],
+               consumer=None) -> list[SourceMetrics]:
+    """Convenience: pump every (source, config) pair to completion inline."""
+    runner = IngestRunner(broker, consumer=consumer)
+    out = [runner.add(s, c) for s, c in pairs]
+    runner.run_inline()
+    return out

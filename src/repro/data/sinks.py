@@ -1,0 +1,216 @@
+"""Sinks: where micro-batch results go (paper Fig. 7's right-hand side —
+visualization, storage, downstream topics; DELTA's ``backends/``).
+
+The dstream layer gives at-least-once delivery: a batch whose sink failed is
+replayed at the same offsets. Sinks here are **idempotent by key** — a
+``(key, value)`` written twice is skipped the second time — which upgrades
+the end-to-end contract to exactly-once, the same argument DELTA makes for
+its MongoDB backend (unique run/chunk indices) and Kafka makes for
+transactional producers.
+
+``write_batch`` is the one entry point; ``describe_result_items`` maps an
+arbitrary batch result onto keyed items (lists of ``(key, value)`` pass
+through; anything else becomes a single ``batch-NNNNNN`` item).
+"""
+from __future__ import annotations
+
+import os
+import threading
+from typing import Any, Callable, Iterable, Protocol, Sequence, runtime_checkable
+
+import numpy as np
+
+from repro.core.broker import Broker
+from repro.utils import get_logger
+
+log = get_logger(__name__)
+
+KeyedItem = tuple[str, Any]
+
+
+@runtime_checkable
+class Sink(Protocol):
+    """Batch-oriented keyed sink. Returns the number of items actually
+    written (duplicates skipped — idempotence is part of the contract)."""
+
+    def write_batch(self, items: Sequence[KeyedItem]) -> int: ...
+
+    def close(self) -> None: ...
+
+
+def describe_result_items(result: Any, batch_index: int) -> list[KeyedItem]:
+    """Normalize a batch result into keyed items for a sink.
+
+    A list of ``(key, value)`` pairs (keys str or bytes) passes through;
+    ``None`` produces nothing; any other value becomes one item keyed by the
+    batch index, so replaying the batch overwrites rather than duplicates.
+    """
+    if result is None:
+        return []
+    if isinstance(result, list) and all(
+            isinstance(x, tuple) and len(x) == 2
+            and isinstance(x[0], (str, bytes)) for x in result):
+        return [(k.decode() if isinstance(k, bytes) else k, v)
+                for k, v in result]
+    return [(f"batch-{batch_index:06d}", result)]
+
+
+class KeyedSink:
+    """Base: in-process dedupe by key. Subclasses implement ``_write_one``;
+    ``_already_stored`` lets a subclass extend idempotence across restarts
+    (e.g. files on disk)."""
+
+    def __init__(self) -> None:
+        self._seen: set[str] = set()
+        self._lock = threading.Lock()
+        self.written = 0
+        self.skipped = 0
+
+    def _write_one(self, key: str, value: Any) -> None:  # pragma: no cover
+        raise NotImplementedError
+
+    def _already_stored(self, key: str) -> bool:
+        return False
+
+    def write_batch(self, items: Sequence[KeyedItem], *,
+                    overwrite: bool = False) -> int:
+        """``overwrite=True`` bypasses dedupe for keys that must track the
+        latest run (e.g. a final-result artifact) — use sparingly; it trades
+        away the exactly-once property for those keys."""
+        n = 0
+        for key, value in items:
+            with self._lock:
+                dup = (not overwrite
+                       and (key in self._seen or self._already_stored(key)))
+                self._seen.add(key)
+            if dup:
+                self.skipped += 1
+                continue
+            self._write_one(key, value)
+            self.written += 1
+            n += 1
+        return n
+
+    def close(self) -> None:
+        pass
+
+
+class NpzDirectorySink(KeyedSink):
+    """Checkpoint-style artifact store: one ``<key>.npz`` per item under
+    ``directory``. Values may be an array, a dict of arrays, or a scalar.
+    Idempotent across restarts: an existing file is never rewritten."""
+
+    def __init__(self, directory: str) -> None:
+        super().__init__()
+        self.directory = directory
+        os.makedirs(directory, exist_ok=True)
+
+    def path_for(self, key: str) -> str:
+        safe = key.replace(os.sep, "_")
+        return os.path.join(self.directory, f"{safe}.npz")
+
+    def _already_stored(self, key: str) -> bool:
+        return os.path.exists(self.path_for(key))
+
+    def _write_one(self, key: str, value: Any) -> None:
+        arrays = (dict(value) if isinstance(value, dict)
+                  else {"value": np.asarray(value)})
+        arrays = {k: np.asarray(v) for k, v in arrays.items()}
+        path = self.path_for(key)
+        # write via an open handle: np.savez would append ".npz" to a bare
+        # tmp name, and a ".tmp.npz" suffix would show up in keys_on_disk()
+        # if we crashed before the rename
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            np.savez(f, **arrays)
+        os.replace(tmp, path)
+
+    def keys_on_disk(self) -> list[str]:
+        return sorted(f[:-4] for f in os.listdir(self.directory)
+                      if f.endswith(".npz"))
+
+
+class TopicSink(KeyedSink):
+    """Pipe results into a downstream broker topic — DELTA's backend-chaining
+    and the paper's multi-stage pipelines: this topic is the next stage's
+    :class:`~repro.data.sources.TopicSource`."""
+
+    def __init__(self, broker: Broker, topic: str, partitions: int = 1) -> None:
+        super().__init__()
+        self.broker = broker
+        self.topic = topic
+        if topic not in broker.topics():
+            broker.create_topic(topic, partitions)
+        self._rr = 0
+
+    def _write_one(self, key: str, value: Any) -> None:
+        n = self.broker.num_partitions(self.topic)
+        self.broker.produce(self.topic, value, key=key.encode(),
+                            partition=self._rr % n)
+        self._rr += 1
+
+
+class CallbackSink(KeyedSink):
+    """Hand each new ``(key, value)`` to a callable (live plots, asserts)."""
+
+    def __init__(self, fn: Callable[[str, Any], None]) -> None:
+        super().__init__()
+        self._fn = fn
+
+    def _write_one(self, key: str, value: Any) -> None:
+        self._fn(key, value)
+
+
+class MetricsSink:
+    """Latency/throughput aggregation over batches — feeds the same numbers
+    as :class:`~repro.core.pipeline.PipelineReport` for sink-side accounting.
+
+    This is a *batch* sink: call ``observe(info)`` per
+    :class:`~repro.core.dstream.BatchInfo` (or register the instance with
+    ``StreamingContext.add_sink`` / ``NearRealTimePipeline`` — it is
+    callable). ``write_batch`` also counts keyed items, so it composes in a
+    fan-out next to a storage sink.
+    """
+
+    def __init__(self) -> None:
+        self.batches = 0
+        self.records = 0
+        self.items = 0
+        self.latencies: list[float] = []
+
+    def observe(self, info: Any) -> None:
+        self.batches += 1
+        self.records += info.num_records
+        self.latencies.append(info.processing_time)
+
+    __call__ = observe
+
+    def write_batch(self, items: Sequence[KeyedItem]) -> int:
+        self.items += len(items)
+        return 0
+
+    def close(self) -> None:
+        pass
+
+    def report(self) -> dict[str, float]:
+        if not self.latencies:
+            return {"batches": 0, "records": 0, "items": self.items}
+        total = max(sum(self.latencies), 1e-9)
+        return {
+            "batches": self.batches,
+            "records": self.records,
+            "items": self.items,
+            "mean_latency_s": sum(self.latencies) / len(self.latencies),
+            "max_latency_s": max(self.latencies),
+            "throughput_rec_per_s": self.records / total,
+        }
+
+
+def fan_out(sinks: Iterable[Sink]) -> Callable[[Sequence[KeyedItem]], int]:
+    """Write the same items to several sinks; returns total writes."""
+    sinks = list(sinks)
+
+    def write(items: Sequence[KeyedItem]) -> int:
+        return sum(s.write_batch(items) for s in sinks)
+
+    return write

@@ -28,6 +28,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models.layers import activation, normal_init, split_keys
 from repro.parallel.sharding import logical_constraint
+from repro.utils import shard_map_compat
 
 
 def padded_experts(config: ModelConfig) -> int:
@@ -233,7 +234,7 @@ def moe_layer_a2a(x: jax.Array, params: dict, config: ModelConfig
     in_specs = (P(bspec, "model", None), P(None, None),
                 P(axes, None, None), P(axes, None, None),
                 P(axes, None, None))
-    out, aux = jax.shard_map(
+    out, aux = shard_map_compat(
         body, mesh=mesh,
         in_specs=in_specs,
         out_specs=(P(bspec, "model", None), P()),

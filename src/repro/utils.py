@@ -15,6 +15,46 @@ import numpy as np
 
 _LOG_FORMAT = "%(asctime)s %(levelname).1s %(name)s: %(message)s"
 
+# -- jax version compat ------------------------------------------------------
+# shard_map graduated from jax.experimental (with kwargs renamed), and
+# make_mesh grew axis_types, in newer jax; these shims keep one call site per
+# API working on both.
+
+def shard_map_compat(fn, mesh, in_specs, out_specs, **kwargs):
+    """jax.shard_map on new jax; jax.experimental.shard_map on old, with
+    ``check_vma``->``check_rep`` and ``axis_names``->``auto`` translated."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kwargs)
+    from jax.experimental.shard_map import shard_map
+    if "check_vma" in kwargs:                    # renamed (same meaning)
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    if "axis_names" in kwargs:                   # old API names the complement
+        manual = set(kwargs.pop("axis_names"))
+        kwargs["auto"] = frozenset(set(mesh.axis_names) - manual)
+    return shard_map(fn, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, **kwargs)
+
+
+def peak_memory_bytes(memory_analysis) -> int:
+    """CompiledMemoryStats.peak_memory_in_bytes where available; otherwise
+    the argument+output+temp estimate older jaxlib exposes."""
+    peak = getattr(memory_analysis, "peak_memory_in_bytes", None)
+    if peak is not None:
+        return int(peak)
+    ma = memory_analysis
+    return int(ma.argument_size_in_bytes + ma.output_size_in_bytes
+               + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+
+
+def make_mesh_compat(shape, axes, **kwargs):
+    """jax.make_mesh with axis_types=Auto where supported (Auto is the
+    default behavior on versions without the parameter)."""
+    if hasattr(jax.sharding, "AxisType"):
+        kwargs.setdefault("axis_types",
+                          (jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **kwargs)
+
 
 def get_logger(name: str) -> logging.Logger:
     if not name.startswith("repro"):      # e.g. "__main__" under python -m

@@ -1,0 +1,249 @@
+"""Data sources + ingest runtime: replay determinism, seek/resume via
+StreamProgress, and backpressure policies under a fast SyntheticRateSource."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import Broker, Context, StreamingContext
+from repro.data import (DetectorSource, FileReplaySource, IngestConfig,
+                        IngestRunner, ProjectionSource, SyntheticRateSource,
+                        TopicSource, ingest_all, save_npz_capture)
+
+
+# -- replay determinism ------------------------------------------------------
+
+def test_npz_replay_is_deterministic(tmp_path):
+    path = str(tmp_path / "capture.npz")
+    frames = [(f"frame-{i}", np.full((4, 4), i, np.float32)) for i in range(9)]
+    save_npz_capture(path, frames)
+    a = FileReplaySource(path)
+    b = FileReplaySource(path)
+    ra, rb = a.poll(100), b.poll(100)
+    assert [k for k, _ in ra] == [k for k, _ in rb]
+    assert len(ra) == 9 and a.exhausted
+    for i, (key, val) in enumerate(ra):
+        assert key.decode().endswith(f"frame-{i}")
+        np.testing.assert_array_equal(val, frames[i][1])
+
+
+def test_jsonl_replay_preserves_file_order(tmp_path):
+    path = str(tmp_path / "events.jsonl")
+    events = [{"i": i, "v": i * i} for i in range(7)]
+    with open(path, "w") as f:
+        for e in events:
+            f.write(json.dumps(e) + "\n")
+    src = FileReplaySource(path)
+    assert [v for _, v in src.poll(100)] == events
+
+
+def test_seek_replays_same_records(tmp_path):
+    path = str(tmp_path / "c.npz")
+    save_npz_capture(path, [(f"x{i}", np.arange(i + 1)) for i in range(6)])
+    src = FileReplaySource(path)
+    first = src.poll(4)
+    src.seek(0)
+    again = src.poll(4)
+    assert [k for k, _ in first] == [k for k, _ in again]
+    src.seek(5)
+    assert src.position == 5 and len(src.poll(10)) == 1
+    with pytest.raises(ValueError):
+        src.seek(99)
+
+
+def test_detector_and_projection_sources_match_apps():
+    from repro.apps.ptycho.sim import simulate
+    problem = simulate(64, 16, 12)
+    det = DetectorSource(problem, max_frames=10)
+    recs = det.poll(100)
+    assert [v for _, v in recs] == list(range(10)) and det.exhausted
+
+    det2 = DetectorSource(problem, max_frames=3, emit_frames=True)
+    (_, (idx, frame)), = det2.poll(1)
+    assert idx == 0
+    np.testing.assert_allclose(frame, np.asarray(problem.magnitudes[0]))
+
+    sino = np.arange(20, dtype=np.float32).reshape(5, 4)
+    proj = ProjectionSource(sino)
+    vals = [v for _, v in proj.poll(100)]
+    assert [i for i, _ in vals] == list(range(5))
+    np.testing.assert_array_equal(vals[3][1], sino[3])
+
+
+# -- seek/resume after restart via StreamProgress ----------------------------
+
+def test_source_resume_after_restart(tmp_path):
+    """Kill the context mid-stream; a new context over the same checkpoint
+    resumes without reprocessing or re-producing records."""
+    ckpt = str(tmp_path / "progress.json")
+    broker = Broker()
+    src = SyntheticRateSource(rate=1e9, total=20)
+    sc = StreamingContext(Context(), broker, max_records_per_partition=4,
+                          checkpoint_path=ckpt)
+    sc.subscribe_source(src, topic="t")
+    got: list[int] = []
+    sc.foreach_batch(lambda rdd, info: got.extend(rdd.collect()))
+    sc.run_one_batch()
+    sc.run_one_batch()
+    assert got == list(range(8))
+
+    # "crash": new context + NEW source instance over the same broker/ckpt;
+    # subscribe_source seeks the source past what the broker already holds.
+    src2 = SyntheticRateSource(rate=1e9, total=20)
+    sc2 = StreamingContext(Context(), broker, max_records_per_partition=4,
+                          checkpoint_path=ckpt)
+    sc2.subscribe_source(src2, topic="t")
+    got2: list[int] = []
+    sc2.foreach_batch(lambda rdd, info: got2.extend(rdd.collect()))
+    while not (sc2.sources_exhausted and sc2.lag("t") == 0):
+        sc2.run_one_batch()
+    assert got2 == list(range(8, 20))
+    # nothing was double-produced into the log
+    assert sum(broker.end_offsets("t")) == 20
+
+
+def test_topic_source_seek_is_total_position():
+    """seek(n) repositions by total records emitted, distributed over
+    partitions in drain order — the contract subscribe_source relies on
+    when resuming a chained stage."""
+    broker = Broker()
+    broker.create_topic("src", 2)
+    for i in range(10):
+        broker.produce("src", i, partition=i % 2)   # p0: evens, p1: odds
+    ts = TopicSource(broker, "src", stop_at_end=True)
+    first = [v for _, v in ts.poll(100)]
+    assert ts.position == 10
+    ts.seek(7)                          # p0 fully drained (5) + 2 of p1
+    rest = [v for _, v in ts.poll(100)]
+    assert first[7:] == rest == [5, 7, 9]
+
+
+def test_subscribe_source_fills_all_partitions_per_batch():
+    """max_records_per_partition is a per-partition cap: a 2-partition
+    source topic gets 2x records pumped per micro-batch, matching what the
+    consumer can drain."""
+    broker = Broker()
+    sc = StreamingContext(Context(), broker, max_records_per_partition=8)
+    sc.subscribe_source(SyntheticRateSource(rate=1e9, total=32),
+                        topic="t", partitions=2)
+    info = sc.run_one_batch()
+    assert info.num_records == 16       # 8 per partition, both filled
+
+
+def test_topic_source_chains_stages():
+    """Stage 1 topic re-ingested as stage 2's source (multi-stage pipeline)."""
+    broker = Broker()
+    broker.create_topic("stage1", 2)
+    for i in range(10):
+        broker.produce("stage1", i, partition=i % 2)
+    src = TopicSource(broker, "stage1", stop_at_end=True)
+    sc = StreamingContext(Context(), broker)
+    sc.subscribe_source(src, topic="stage2")
+    got: list[int] = []
+    sc.foreach_batch(lambda rdd, info: got.extend(rdd.collect()))
+    while not (sc.sources_exhausted and sc.lag("stage2") == 0):
+        if sc.run_one_batch() is None:
+            break
+    assert sorted(got) == list(range(10))
+    assert src.exhausted
+
+
+# -- backpressure ------------------------------------------------------------
+
+def _drain(sc, runner, topic, max_iters=10000):
+    i = 0
+    while (not runner.done or sc.lag(topic) > 0) and i < max_iters:
+        sc.run_one_batch()
+        i += 1
+    assert i < max_iters, "pipeline never drained"
+
+
+def test_backpressure_block_policy_bounds_lag():
+    broker = Broker()
+    sc = StreamingContext(Context(), broker, max_records_per_partition=8)
+    runner = IngestRunner(broker, consumer=sc)
+    fast = SyntheticRateSource(rate=1e9, total=300)
+    cfg = IngestConfig(topic="t", policy="block", max_pending=16,
+                       poll_batch=64)
+    m = runner.add(fast, cfg)
+    sc.subscribe(["t"])
+    sc.foreach_batch(lambda rdd, info: rdd.count())
+    seen_lags = []
+    while not runner.done or sc.lag("t") > 0:
+        runner.pump()                       # inline: deterministic interleave
+        seen_lags.append(sc.lag("t"))
+        sc.run_one_batch()
+    assert m.produced == 300 and m.dropped == 0
+    assert max(seen_lags) <= cfg.max_pending       # block never overshoots
+    assert m.max_observed_lag <= cfg.max_pending
+
+
+def test_backpressure_drop_policy_sheds_load():
+    broker = Broker()
+    sc = StreamingContext(Context(), broker, max_records_per_partition=4)
+    runner = IngestRunner(broker, consumer=sc)
+    fast = SyntheticRateSource(rate=1e9, total=400)
+    cfg = IngestConfig(topic="t", policy="drop", max_pending=8, poll_batch=32)
+    m = runner.add(fast, cfg)
+    sc.subscribe(["t"])
+    sc.foreach_batch(lambda rdd, info: rdd.count())
+    # producer runs much faster than the consumer: pump many rounds per batch
+    while not runner.done or sc.lag("t") > 0:
+        for _ in range(4):
+            runner.pump()
+        sc.run_one_batch()
+    assert m.dropped > 0                           # load was shed...
+    assert m.produced + m.dropped == 400           # ...and accounted for
+    assert m.max_observed_lag <= cfg.max_pending + cfg.poll_batch
+
+
+def test_backpressure_sample_policy_thins_stream():
+    broker = Broker()
+    sc = StreamingContext(Context(), broker, max_records_per_partition=4)
+    runner = IngestRunner(broker, consumer=sc)
+    fast = SyntheticRateSource(rate=1e9, total=400)
+    cfg = IngestConfig(topic="t", policy="sample", max_pending=8,
+                       poll_batch=32, sample_stride=4)
+    m = runner.add(fast, cfg)
+    sc.subscribe(["t"])
+    got: list[int] = []
+    sc.foreach_batch(lambda rdd, info: got.extend(rdd.collect()))
+    while not runner.done or sc.lag("t") > 0:
+        for _ in range(4):
+            runner.pump()
+        sc.run_one_batch()
+    assert m.sampled_out > 0
+    assert m.produced + m.sampled_out == 400
+    assert sorted(got) == got                      # thinned but still ordered
+
+
+def test_ingest_runner_thread_and_rate_limit():
+    broker = Broker()
+    sc = StreamingContext(Context(), broker, max_records_per_partition=50)
+    runner = IngestRunner(broker, consumer=sc)
+    src = SyntheticRateSource(rate=1e9, total=120)
+    m = runner.add(src, IngestConfig(topic="t", rate_limit=4000.0,
+                                     poll_batch=16))
+    sc.subscribe(["t"])
+    got: list[int] = []
+    sc.foreach_batch(lambda rdd, info: got.extend(rdd.collect()))
+    runner.start()
+    assert runner.join(timeout=30)
+    runner.stop()
+    while sc.lag("t") > 0:
+        sc.run_one_batch()
+    assert got == list(range(120)) and m.produced == 120
+    # rate-limited: 120 records at 4k rec/s need >= ~25 ms
+    assert m.throughput <= 4000.0 * 1.5 + 1e-9
+
+
+def test_ingest_all_convenience():
+    broker = Broker()
+    a = SyntheticRateSource(rate=1e9, total=5)
+    b = SyntheticRateSource(rate=1e9, total=7, value_fn=lambda i: -i)
+    ms = ingest_all(broker, [(a, IngestConfig(topic="ta")),
+                             (b, IngestConfig(topic="tb"))])
+    assert [m.produced for m in ms] == [5, 7]
+    assert sum(broker.end_offsets("ta")) == 5
+    assert sum(broker.end_offsets("tb")) == 7

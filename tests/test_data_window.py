@@ -1,0 +1,101 @@
+"""Windowing over micro-batches: tumbling/sliding, count/time, flush."""
+import pytest
+
+from repro.core import Broker, Context, StreamingContext
+from repro.core.dstream import BatchInfo
+from repro.data import SyntheticRateSource, WindowSpec, Windower, windowed
+
+
+def _batch(index, t):
+    return BatchInfo(index=index, ranges=[], num_records=0, scheduled_at=t)
+
+
+def collect_windows():
+    fired = []
+
+    def fn(records, info):
+        fired.append((info.index, info.start, info.end, list(records),
+                      info.batches, info.partial))
+        return len(records)
+
+    return fired, fn
+
+
+def test_tumbling_count_window():
+    fired, fn = collect_windows()
+    w = Windower(WindowSpec(size=3), fn)
+    assert w.push([0, 1], _batch(0, 0.0)) == []
+    assert w.push([2, 3, 4], _batch(1, 0.1)) == [3]
+    assert w.push([5], _batch(2, 0.2)) == [3]
+    assert fired == [(0, 0.0, 3.0, [0, 1, 2], [0, 1], False),
+                     (1, 3.0, 6.0, [3, 4, 5], [1, 2], False)]
+
+
+def test_sliding_count_window_overlaps():
+    fired, fn = collect_windows()
+    w = Windower(WindowSpec(size=4, slide=2), fn)
+    w.push(list(range(8)), _batch(0, 0.0))
+    assert [rec for _, _, _, rec, _, _ in fired] == \
+        [[0, 1, 2, 3], [2, 3, 4, 5], [4, 5, 6, 7]]
+    assert [(s, e) for _, s, e, _, _, _ in fired] == \
+        [(0.0, 4.0), (2.0, 6.0), (4.0, 8.0)]
+
+
+def test_count_window_flush_fires_partial():
+    fired, fn = collect_windows()
+    w = Windower(WindowSpec(size=10), fn)
+    w.push([1, 2, 3], _batch(0, 0.0))
+    assert w.flush() == [3]
+    assert fired[-1][3] == [1, 2, 3] and fired[-1][5] is True
+    assert w.flush() == []                      # nothing left
+
+
+def test_tumbling_time_window():
+    fired, fn = collect_windows()
+    w = Windower(WindowSpec(size=1.0, kind="time"), fn)
+    w.push(["a"], _batch(0, 100.0))             # t=0.0
+    w.push(["b"], _batch(1, 100.4))             # t=0.4
+    assert fired == []                          # window [0,1) still open
+    w.push(["c"], _batch(2, 101.2))             # t=1.2 closes [0,1)
+    assert len(fired) == 1
+    assert fired[0][3] == ["a", "b"] and (fired[0][1], fired[0][2]) == (0.0, 1.0)
+    w.push(["d"], _batch(3, 102.5))             # t=2.5 closes [1,2)
+    assert fired[1][3] == ["c"]
+
+
+def test_sliding_time_window():
+    fired, fn = collect_windows()
+    w = Windower(WindowSpec(size=2.0, slide=1.0, kind="time"), fn)
+    w.push([1], _batch(0, 10.0))                # t=0
+    w.push([2], _batch(1, 11.5))                # t=1.5
+    w.push([3], _batch(2, 12.5))                # t=2.5 closes [0,2)
+    w.push([4], _batch(3, 13.5))                # t=3.5 closes [1,3)
+    assert [rec for _, _, _, rec, _, _ in fired] == [[1, 2], [2, 3]]
+
+
+def test_windowed_over_streaming_context():
+    """'Reconstruct over the last K frame batches': sliding count window
+    composed on a StreamingContext, fed by a subscribed source."""
+    broker = Broker()
+    sc = StreamingContext(Context(), broker, max_records_per_partition=5)
+    sc.subscribe_source(SyntheticRateSource(rate=1e9, total=20), topic="t")
+    wout = []
+    sums = []
+    sc.foreach_batch(windowed(WindowSpec(size=10, slide=5),
+                              lambda recs, wi: sums.append(sum(recs)),
+                              windower_out=wout))
+    while not (sc.sources_exhausted and sc.lag("t") == 0):
+        sc.run_one_batch()
+    wout[0].flush()
+    # windows [0,10), [5,15), [10,20), then flush of the residual [15,20)
+    assert sums == [sum(range(10)), sum(range(5, 15)), sum(range(10, 20)),
+                    sum(range(15, 20))]
+
+
+def test_window_spec_validation():
+    with pytest.raises(ValueError):
+        WindowSpec(size=0)
+    with pytest.raises(ValueError):
+        WindowSpec(size=4, slide=-1)
+    with pytest.raises(ValueError):
+        WindowSpec(size=4, kind="session")

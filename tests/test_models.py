@@ -48,6 +48,11 @@ def test_prefill_then_decode_matches_full_forward(arch):
     cfg = get_config(arch, reduced=True)
     if cfg.attention_impl == "blocked":
         cfg = cfg.replace(attention_impl="naive")
+    if cfg.num_experts:
+        # capacity-limited MoE routing is sequence-dependent (dropping a
+        # token depends on its neighbours), so the serve invariant only
+        # holds drop-free — same setup as the a2a dispatch test.
+        cfg = cfg.replace(capacity_factor=4.0)
     model = get_model(cfg)
     key = jax.random.PRNGKey(1)
     params = model.init(key, cfg)
