@@ -5,7 +5,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-data bench examples deps-check
+.PHONY: test test-data test-transport bench examples deps-check
 
 test:           ## tier-1: full suite, stop at first failure
 	$(PYTHON) -m pytest -x -q
@@ -14,13 +14,18 @@ test-data:      ## just the data subsystem
 	$(PYTHON) -m pytest -q tests/test_data_sources.py tests/test_data_sinks.py \
 	    tests/test_data_window.py tests/test_broker_dstream.py
 
+test-transport: ## socket broker transport (framing, reconnect, cross-process)
+	$(PYTHON) -m pytest -q tests/test_transport.py
+
 bench:          ## CSV benchmark sweep (includes bench_ingest)
 	$(PYTHON) -m benchmarks.run
 
 examples:       ## fast end-to-end example runs
 	$(PYTHON) examples/ptycho_pipeline.py --fast
 	$(PYTHON) examples/tomo_pipeline.py --nray 32 --nslice 16
+	$(PYTHON) examples/remote_ingest.py --frames 48
 
-deps-check:     ## verify runtime imports resolve (no installs performed)
+deps-check:     ## verify runtime imports resolve (no installs) + docs links
 	$(PYTHON) -c "import jax, numpy, scipy; print('runtime deps ok')"
 	-$(PYTHON) -c "import hypothesis; print('hypothesis ok')"
+	$(PYTHON) tools/check_docs_links.py

@@ -2,16 +2,22 @@
 behavior under overload (the near-real-time criterion stressed past its
 breaking point instead of only at the happy path).
 
-Three measurements:
+Four measurements:
   1. ingest/source_to_batch — raw records/s through SyntheticRateSource ->
      IngestRunner -> broker -> StreamingContext micro-batches.
-  2. ingest/backpressure_drop — a rate-limited (slow) pipeline fed ~10x over
+  2. ingest/remote_transport — the same end-to-end path with every produce,
+     offset query and commit crossing the socket transport (RemoteBroker ->
+     BrokerServer over a Unix domain socket): the per-record cost of the
+     multi-host topology vs. measurement 1's shared-memory baseline.
+  3. ingest/backpressure_drop — a rate-limited (slow) pipeline fed ~10x over
      capacity with the drop policy: lag stays bounded, overload is shed.
-  3. ingest/backpressure_sample — same overload with the sample policy: the
+  4. ingest/backpressure_sample — same overload with the sample policy: the
      stream thins (every k-th record survives) but stays ordered and bounded.
 """
 from __future__ import annotations
 
+import os
+import tempfile
 import time
 
 from benchmarks.common import emit, time_call
@@ -41,6 +47,43 @@ def _throughput(records: int, batch: int) -> None:
     sec = time_call(once, repeats=3)
     emit("ingest/source_to_batch", sec / records,
          f"{records} records end-to-end in {sec:.3f}s; "
+         f"throughput {records / sec:.0f} rec/s")
+
+
+def _remote_throughput(records: int, batch: int) -> None:
+    """Measurement 1 with the broker behind the socket transport: the ingest
+    thread speaks RemoteBroker, the consumer commits after every batch, and
+    backpressure lag is computed server-side from those commits."""
+    from repro.core import Broker, Context, StreamingContext
+    from repro.data import (IngestConfig, IngestRunner, RemoteBroker,
+                            SyntheticRateSource, serve_broker)
+
+    def once() -> None:
+        path = os.path.join(tempfile.mkdtemp(prefix="bench-broker-"), "b.sock")
+        broker = Broker()
+        server = serve_broker(broker, path)
+        remote = RemoteBroker(server.address)
+        sc = StreamingContext(Context(), broker,
+                              max_records_per_partition=batch // 2)
+        runner = IngestRunner(remote, consumer=remote)
+        src = SyntheticRateSource(rate=1e9, total=records)
+        runner.add(src, IngestConfig(topic="t", partitions=2,
+                                     poll_batch=batch, max_pending=4 * batch))
+        sc.subscribe(["t"])
+        sc.foreach_batch(lambda rdd, info: rdd.count())
+        runner.start()
+        while not runner.done or sc.lag("t") > 0:
+            if sc.run_one_batch() is None:
+                time.sleep(0.0005)
+        runner.stop()
+        remote.close()
+        server.stop()
+        os.unlink(path)
+        assert sum(b.num_records for b in sc.history) == records
+
+    sec = time_call(once, repeats=3)
+    emit("ingest/remote_transport", sec / records,
+         f"{records} records through the Unix-socket broker in {sec:.3f}s; "
          f"throughput {records / sec:.0f} rec/s")
 
 
@@ -84,6 +127,7 @@ def _backpressure(policy: str, records: int = 2000,
 
 def run(records: int = 20000, batch: int = 200) -> None:
     _throughput(records, batch)
+    _remote_throughput(records // 4, batch)
     _backpressure("drop")
     _backpressure("sample")
 

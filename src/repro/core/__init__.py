@@ -1,7 +1,8 @@
 """Spark-MPI platform core: RDD middleware, broker, discretized streams,
 PMI wire-up, the Spark-MPI collective bridge, fault tolerance, pipelines."""
 from repro.core.bridge import MPIBridge, make_worker_mesh, rank_of
-from repro.core.broker import Broker, OffsetRange, Record, create_rdd
+from repro.core.broker import (Broker, InMemoryPartitionLog, OffsetRange,
+                               PartitionLog, Record, create_rdd)
 from repro.core.dstream import BatchInfo, StreamingContext, StreamProgress
 from repro.core.fault import ElasticController, Watchdog, run_with_recovery
 from repro.core.pipeline import (NearRealTimePipeline, PipelineConfig,
@@ -12,7 +13,8 @@ from repro.core.rdd import (RDD, Context, FailureInjector, PartitionLostError,
 
 __all__ = [
     "MPIBridge", "make_worker_mesh", "rank_of",
-    "Broker", "OffsetRange", "Record", "create_rdd",
+    "Broker", "PartitionLog", "InMemoryPartitionLog", "OffsetRange",
+    "Record", "create_rdd",
     "BatchInfo", "StreamingContext", "StreamProgress",
     "ElasticController", "Watchdog", "run_with_recovery",
     "NearRealTimePipeline", "PipelineConfig", "PipelineReport",

@@ -7,11 +7,28 @@ offsets; no ordering across partitions; messages are (key, value) byte pairs.
 — becomes :func:`create_rdd` here: an RDD whose partitions are explicit
 ``OffsetRange`` reads.
 
-The broker is in-process because this container is one host, but the API is
-transport-shaped: producers append, consumers poll by (topic, partition,
-offset), and nothing downstream (DStream scheduler, bridge, solvers) can tell
-the difference. The paper's own future-work item — "augment the Kafka
-Receiver with interfaces to other data sources, such as ZeroMQ" — is the
+Storage is factored behind the :class:`PartitionLog` protocol
+(``append``/``read``/``end_offset``): :class:`Broker` composes one log per
+(topic, partition) and never looks inside. :class:`InMemoryPartitionLog` is
+the single-host default; the multi-host path serves the *whole broker* over a
+socket instead (``repro.data.transport``: :class:`~repro.data.transport
+.BrokerServer` in the consumer process, :class:`~repro.data.transport
+.RemoteBroker` — same duck type as :class:`Broker` — in each producer), so
+ingest and reconstruction can live on different hosts, the beamline-vs-
+cluster split of the paper's Fig. 7 and its ZeroMQ future-work item
+(see ``docs/transport.md``).
+
+The broker also tracks *committed* (consumer-processed) offsets per topic —
+:meth:`Broker.commit` / :meth:`Broker.committed` / :meth:`Broker.lag` — which
+:class:`~repro.core.dstream.StreamingContext` pushes after every successful
+micro-batch. In-process this is redundant with the context's own progress;
+over the transport it is what lets a *remote* producer's backpressure see how
+far the consumer actually got.
+
+Producers append, consumers poll by (topic, partition, offset), and nothing
+downstream (DStream scheduler, bridge, solvers) can tell in-process from
+remote. The paper's own future-work item — "augment the Kafka Receiver with
+interfaces to other data sources, such as ZeroMQ" — is the
 :class:`repro.data.sources.Source` protocol: concrete sources (detector,
 tilt-series, file replay, synthetic rate, topic re-ingest) are pumped into
 broker topics by :class:`repro.data.ingest.IngestRunner` (threaded, with
@@ -21,7 +38,7 @@ from __future__ import annotations
 
 import threading
 from dataclasses import dataclass
-from typing import Any, Callable, Sequence
+from typing import Any, Callable, Protocol, Sequence, runtime_checkable
 
 from repro.core.rdd import RDD, Context
 
@@ -46,7 +63,24 @@ class OffsetRange:
         return max(0, self.until - self.start)
 
 
-class _PartitionLog:
+@runtime_checkable
+class PartitionLog(Protocol):
+    """Append-only offset-addressed log: the storage unit behind one
+    (topic, partition). ``append`` returns the record's offset; ``read``
+    returns records in ``[start, min(until, end))``; offsets are dense from 0.
+    Implementations must be thread-safe (one broker serves many producer and
+    consumer threads)."""
+
+    def append(self, key: bytes | None, value: Any, timestamp: float) -> int: ...
+
+    def read(self, start: int, until: int) -> list[Record]: ...
+
+    def end_offset(self) -> int: ...
+
+
+class InMemoryPartitionLog:
+    """Default :class:`PartitionLog`: a locked Python list (single host)."""
+
     def __init__(self) -> None:
         self._records: list[Record] = []
         self._lock = threading.Lock()
@@ -67,18 +101,32 @@ class _PartitionLog:
             return len(self._records)
 
 
-class Broker:
-    """Topics → partitions → append-only logs. Thread-safe."""
+# Pre-protocol name, kept for anything that reached into the underscore API.
+_PartitionLog = InMemoryPartitionLog
 
-    def __init__(self) -> None:
-        self._topics: dict[str, list[_PartitionLog]] = {}
+
+class Broker:
+    """Topics → partitions → append-only :class:`PartitionLog` s. Thread-safe.
+
+    ``log_factory`` picks the storage implementation per partition
+    (:class:`InMemoryPartitionLog` unless told otherwise).
+    """
+
+    def __init__(self, log_factory: Callable[[], PartitionLog] | None = None
+                 ) -> None:
+        self._log_factory: Callable[[], PartitionLog] = (
+            log_factory or InMemoryPartitionLog)
+        self._topics: dict[str, list[PartitionLog]] = {}
+        self._committed: dict[str, list[int]] = {}
         self._lock = threading.Lock()
 
     def create_topic(self, topic: str, partitions: int = 1) -> None:
         with self._lock:
             if topic in self._topics:
                 raise ValueError(f"topic {topic!r} exists")
-            self._topics[topic] = [_PartitionLog() for _ in range(partitions)]
+            self._topics[topic] = [self._log_factory()
+                                   for _ in range(partitions)]
+            self._committed[topic] = [0] * partitions
 
     def topics(self) -> list[str]:
         with self._lock:
@@ -87,7 +135,7 @@ class Broker:
     def num_partitions(self, topic: str) -> int:
         return len(self._topic(topic))
 
-    def _topic(self, topic: str) -> list[_PartitionLog]:
+    def _topic(self, topic: str) -> list[PartitionLog]:
         with self._lock:
             if topic not in self._topics:
                 raise KeyError(f"unknown topic {topic!r}")
@@ -110,6 +158,38 @@ class Broker:
 
     def end_offsets(self, topic: str) -> list[int]:
         return [log.end_offset() for log in self._topic(topic)]
+
+    # -- consumer progress -------------------------------------------------
+    # Committed offsets live broker-side so producers on *other* hosts can
+    # bound their lag against what the consumer has actually processed
+    # (IngestRunner backpressure over repro.data.transport). Commits are
+    # monotonic: replays never move progress backwards.
+    def commit(self, topic: str, partition: int, offset: int) -> None:
+        # Network-facing via the transport: a bad partition (negative Python
+        # indexing!) or an offset past the log end must not poison the lag
+        # signal backpressure runs on.
+        logs = self._topic(topic)               # raise on unknown topic
+        if not 0 <= partition < len(logs):
+            raise ValueError(
+                f"partition {partition} out of range for topic {topic!r} "
+                f"({len(logs)} partitions)")
+        if not 0 <= offset <= logs[partition].end_offset():
+            raise ValueError(
+                f"commit offset {offset} outside "
+                f"[0, {logs[partition].end_offset()}] for "
+                f"{topic!r}[{partition}]")
+        with self._lock:
+            done = self._committed[topic]
+            done[partition] = max(done[partition], offset)
+
+    def committed(self, topic: str) -> list[int]:
+        self._topic(topic)
+        with self._lock:
+            return list(self._committed[topic])
+
+    def lag(self, topic: str) -> int:
+        """Produced-but-uncommitted records — the backpressure signal."""
+        return sum(self.end_offsets(topic)) - sum(self.committed(topic))
 
 
 def create_rdd(context: Context, broker: Broker,

@@ -13,6 +13,15 @@ examples. Checkpointing of stream progress (consumed offsets) makes a
 restarted pipeline resume where it left off — offsets + replayable broker
 give at-least-once processing, upgraded to exactly-once when the sink is
 idempotent (both demonstrated in tests).
+
+The ``broker`` handed to :class:`StreamingContext` may equally be a
+:class:`~repro.data.transport.RemoteBroker` — same duck type, served from
+another process by :class:`~repro.data.transport.BrokerServer` — which puts
+the consumer on the opposite side of a socket from the detector, the paper's
+Fig. 7 beamline/cluster split (see ``docs/transport.md``). After each
+committed batch the context pushes its progress to the broker
+(``broker.commit``) so *remote* producers' backpressure can measure lag
+against what was actually processed, not just appended.
 """
 from __future__ import annotations
 
@@ -195,8 +204,13 @@ class StreamingContext:
             info.result = self._batch_fn(union, info)
         info.processing_time = time.perf_counter() - t0
         # Commit offsets only after the batch succeeded (at-least-once).
+        # Progress is also pushed broker-side so producers in other processes
+        # (RemoteBroker -> BrokerServer) can bound their lag against it.
+        broker_commit = getattr(self.broker, "commit", None)
         for r in ranges:
             self._progress.offsets[r.topic][r.partition] = r.until
+            if broker_commit is not None:
+                broker_commit(r.topic, r.partition, r.until)
         if self.checkpoint_path:
             self._progress.save(self.checkpoint_path)
         self._batch_index += 1

@@ -9,6 +9,14 @@ a collective program (the "MPI application"); sinks consume results
 The pipeline tracks the paper's near-real-time criterion explicitly:
 per-batch processing time vs. the acquisition interval (§III: 512 frames
 arrive in ~25 s; reconstruction must keep up).
+
+Every box in that figure is now swappable: sources come from
+``repro.data.sources``, sinks from ``repro.data.sinks``, and the broker
+itself may sit in another process — hand the constructor a
+:class:`~repro.data.transport.RemoteBroker` and the detector's
+:class:`~repro.data.ingest.IngestRunner` can run host-side at the beamline
+while this pipeline reconstructs cluster-side (``docs/transport.md``;
+``examples/remote_ingest.py`` runs exactly that split).
 """
 from __future__ import annotations
 

@@ -27,6 +27,10 @@ Class                             Reproduces
 ``sinks.MetricsSink``             latency/throughput aggregation (Fig. 9/10
                                   accounting) feeding ``PipelineReport``
 ``sinks.CallbackSink``            visualization hook (ParaViewWeb stand-in)
+``transport.BrokerServer``        Kafka broker process: serves partition logs
+                                  over TCP / Unix sockets to other processes
+``transport.RemoteBroker``        Kafka client / paper's ZeroMQ direction:
+                                  the ``Broker`` surface spoken over a socket
 ================================  =============================================
 
 All sinks are idempotent by key, upgrading the dstream layer's at-least-once
@@ -41,6 +45,8 @@ from repro.data.sources import (DetectorSource, FileReplaySource,
                                 ProjectionSource, ReplayableSource,
                                 SequenceSource, Source, SyntheticRateSource,
                                 TopicSource, save_npz_capture)
+from repro.data.transport import (BrokerServer, FrameError, RemoteBroker,
+                                  TransportError, parse_address, serve_broker)
 from repro.data.window import WindowInfo, WindowSpec, Windower, windowed
 
 __all__ = [
@@ -51,4 +57,6 @@ __all__ = [
     "WindowSpec", "WindowInfo", "Windower", "windowed",
     "Sink", "KeyedSink", "NpzDirectorySink", "TopicSink", "MetricsSink",
     "CallbackSink", "describe_result_items", "fan_out",
+    "BrokerServer", "RemoteBroker", "serve_broker", "parse_address",
+    "TransportError", "FrameError",
 ]

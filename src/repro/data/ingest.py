@@ -15,6 +15,14 @@ per topic and applies a policy when the bound is hit:
 Lag is measured against the consumer's committed offsets (a
 :class:`~repro.core.dstream.StreamingContext`), so backpressure reflects what
 the pipeline has actually processed, not just what it has been handed.
+
+The runner is transport-agnostic: ``broker`` may be the in-process
+:class:`~repro.core.broker.Broker` or a
+:class:`~repro.data.transport.RemoteBroker` speaking to a consumer-side
+:class:`~repro.data.transport.BrokerServer`. In the remote topology pass the
+same client as ``consumer=`` (it exposes ``lag()`` computed from the offsets
+the consumer committed broker-side), and producer backpressure keeps working
+across the process/host boundary.
 """
 from __future__ import annotations
 
@@ -106,12 +114,19 @@ class IngestRunner:
             self._lag_of = lambda topic: 0
         self._entries: list[_Entry] = []
         self._idle_sleep = idle_sleep
+        self._pumping = False
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
 
     def add(self, source: Source, config: IngestConfig) -> SourceMetrics:
         if config.topic not in self.broker.topics():
-            self.broker.create_topic(config.topic, config.partitions)
+            try:
+                self.broker.create_topic(config.topic, config.partitions)
+            except ValueError:
+                # another producer won the check-then-create race, or a
+                # retried remote create whose first ack was lost — either
+                # way the topic exists now, which is all add() needs
+                pass
         m = SourceMetrics(topic=config.topic)
         self._entries.append(_Entry(source, config, m))
         return m
@@ -122,7 +137,17 @@ class IngestRunner:
 
     @property
     def done(self) -> bool:
-        return all(e.source.exhausted for e in self._entries)
+        """Every source exhausted AND its records handed to the broker.
+
+        A source reports ``exhausted`` the moment its last ``poll`` returns,
+        which is *before* those records reach the broker — a visible window
+        when produce crosses a socket (RemoteBroker). Reading ``exhausted``
+        first and the pump-in-progress flag second closes it: if the flag is
+        clear after exhaustion was observed, the pump that drained the source
+        has fully produced.
+        """
+        exhausted = all(e.source.exhausted for e in self._entries)
+        return exhausted and not self._pumping
 
     # -- one pump step -----------------------------------------------------
     def _produce(self, e: _Entry, records) -> None:
@@ -180,7 +205,11 @@ class IngestRunner:
 
     def pump(self) -> int:
         """One round over all sources; returns total records produced."""
-        return sum(self._pump_one(e) for e in self._entries)
+        self._pumping = True
+        try:
+            return sum(self._pump_one(e) for e in self._entries)
+        finally:
+            self._pumping = False
 
     # -- drive -------------------------------------------------------------
     def run_inline(self, timeout: float | None = None) -> None:

@@ -1,0 +1,437 @@
+"""Multi-host broker transport: partition logs served over sockets.
+
+The paper's pipelines put the detector and the compute cluster on different
+machines, joined by Kafka; its future-work item is to "augment the Kafka
+Receiver with interfaces to other data sources, such as ZeroMQ". PR 1's
+broker is purely in-process, so ingest and reconstruction had to share one
+interpreter. This module crosses that boundary the way Alchemist crosses the
+Spark↔MPI one — a socket-based data service:
+
+- :class:`BrokerServer` owns a local :class:`~repro.core.broker.Broker` and
+  serves its surface (``create_topic``/``produce``/``read``/``end_offset``/
+  ``commit``/…) over TCP or a Unix domain socket, one handler thread per
+  client connection.
+- :class:`RemoteBroker` is a client implementing the same duck type as
+  :class:`~repro.core.broker.Broker`, so ``IngestRunner``,
+  ``StreamingContext`` and ``TopicSource`` work across processes/hosts
+  unchanged. It reconnects after a server restart and bounds its retries.
+
+Wire format (``docs/transport.md`` has the full story): every message is one
+*frame* — a fixed header ``magic(2B) | length(u32) | crc32(u32)`` followed by
+``length`` payload bytes (a pickled message). A frame whose magic, length or
+checksum does not hold is *rejected*, not guessed at: a torn or corrupt write
+kills that connection and the client re-establishes and retries. Retries give
+at-least-once delivery (a ``produce`` whose ack was lost may be re-sent);
+the data layer's idempotent-by-key sinks restore exactly-once downstream,
+the same contract the in-process path already has.
+
+Delivery/ordering semantics match the in-process broker: per-partition total
+order (one handler thread executes one client's requests in order; the log
+append itself is locked), no order across partitions or across clients.
+"""
+from __future__ import annotations
+
+import io
+import pickle
+import socket
+import struct
+import threading
+import time
+import zlib
+from typing import Any, Callable
+
+from repro.core.broker import Broker, OffsetRange, Record  # noqa: F401
+from repro.utils import get_logger
+
+log = get_logger(__name__)
+
+# -- framing -----------------------------------------------------------------
+
+MAGIC = b"\xabK"                       # 2 bytes: frame sync marker
+_HEADER = struct.Struct(">2sII")       # magic | payload length | crc32
+MAX_FRAME_BYTES = 256 * 1024 * 1024    # reject absurd lengths before alloc
+
+# Address = ("host", port) for TCP, or "path.sock" for a Unix domain socket.
+Address = "tuple[str, int] | str"
+
+
+class TransportError(RuntimeError):
+    """Client gave up: retries exhausted or the server returned a non-broker
+    error."""
+
+
+class FrameError(TransportError):
+    """The byte stream is not a well-formed frame (bad magic, bad checksum,
+    torn write). The connection carrying it must be dropped."""
+
+
+def send_frame(sock: socket.socket, payload: bytes) -> None:
+    """Write one length-prefixed, checksummed frame."""
+    if len(payload) > MAX_FRAME_BYTES:
+        # fail fast on the sending side: the receiver would reject it anyway,
+        # and a retry loop can never make an oversized payload fit
+        raise FrameError(
+            f"frame length {len(payload)} exceeds {MAX_FRAME_BYTES}")
+    header = _HEADER.pack(MAGIC, len(payload), zlib.crc32(payload))
+    sock.sendall(header + payload)
+
+
+def _recv_exact(sock: socket.socket, n: int, *, at_boundary: bool) -> bytes | None:
+    """Read exactly ``n`` bytes. Clean EOF *at a frame boundary* returns
+    ``None`` (peer closed between frames); EOF anywhere else is a torn frame.
+    """
+    chunks: list[bytes] = []
+    got = 0
+    while got < n:
+        chunk = sock.recv(min(n - got, 1 << 20))
+        if not chunk:
+            if at_boundary and got == 0:
+                return None
+            raise FrameError(
+                f"torn frame: connection closed after {got}/{n} bytes")
+        chunks.append(chunk)
+        got += len(chunk)
+    return b"".join(chunks)
+
+
+def recv_frame(sock: socket.socket) -> bytes | None:
+    """Read one frame; ``None`` on clean EOF. Raises :class:`FrameError` on
+    torn writes, bad magic, oversized lengths, or checksum mismatch."""
+    raw = _recv_exact(sock, _HEADER.size, at_boundary=True)
+    if raw is None:
+        return None
+    magic, length, crc = _HEADER.unpack(raw)
+    if magic != MAGIC:
+        raise FrameError(f"bad magic {magic!r} (not a broker frame)")
+    if length > MAX_FRAME_BYTES:
+        raise FrameError(f"frame length {length} exceeds {MAX_FRAME_BYTES}")
+    payload = _recv_exact(sock, length, at_boundary=False)
+    if zlib.crc32(payload) != crc:
+        raise FrameError("checksum mismatch (corrupt frame)")
+    return payload
+
+
+def _encode(obj: Any) -> bytes:
+    return pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+
+
+# Payloads arrive from the network, and pickle.loads on untrusted bytes is
+# arbitrary code execution — the op allow-list below would never get a say.
+# Unpickling therefore resolves globals only from this closed set: container
+# builtins, the numpy array-reconstruction machinery, and the broker's own
+# record types. Anything else (os.system, subprocess, custom classes) is
+# refused before instantiation. Extend deliberately via register_safe().
+_SAFE_GLOBALS: set[tuple[str, str]] = (
+    {("builtins", n) for n in (
+        "list", "dict", "tuple", "set", "frozenset", "bytes", "bytearray",
+        "str", "int", "float", "complex", "bool", "slice", "range",
+    )}
+    | {(mod, name)
+       for mod in ("numpy.core.multiarray", "numpy._core.multiarray")
+       for name in ("_reconstruct", "scalar")}
+    | {(mod, "_frombuffer")
+       for mod in ("numpy.core.numeric", "numpy._core.numeric")}
+    | {("numpy", "ndarray"), ("numpy", "dtype")}
+    | {("repro.core.broker", "Record"), ("repro.core.broker", "OffsetRange")}
+)
+
+
+def register_safe(module: str, name: str) -> None:
+    """Allow one more global through the transport's restricted unpickler
+    (for pipelines whose record values are custom classes). Register on both
+    sides of the socket."""
+    _SAFE_GLOBALS.add((module, name))
+
+
+class _RestrictedUnpickler(pickle.Unpickler):
+    def find_class(self, module: str, name: str) -> Any:
+        if (module, name) in _SAFE_GLOBALS:
+            return super().find_class(module, name)
+        raise FrameError(
+            f"refusing to unpickle {module}.{name} from the wire "
+            "(not in the transport allow-list; see register_safe)")
+
+
+def _decode(payload: bytes) -> Any:
+    return _RestrictedUnpickler(io.BytesIO(payload)).load()
+
+
+def _make_socket(address: Any) -> socket.socket:
+    family = socket.AF_UNIX if isinstance(address, str) else socket.AF_INET
+    return socket.socket(family, socket.SOCK_STREAM)
+
+
+# -- server ------------------------------------------------------------------
+
+# The server executes exactly these broker methods; anything else is an error
+# frame, never an attribute lookup on the broker (no remote getattr).
+_OPS = frozenset({
+    "create_topic", "topics", "num_partitions", "produce", "read",
+    "end_offset", "end_offsets", "commit", "committed", "lag", "ping",
+})
+
+
+class BrokerServer:
+    """Serve a local :class:`Broker` to remote clients over a socket.
+
+    ``address`` is ``(host, port)`` for TCP (port 0 picks an ephemeral port;
+    read the bound one back from ``.address``) or a filesystem path for a
+    Unix domain socket. One thread accepts, one thread per connection
+    handles request/response frames — a client's requests execute in order,
+    which is what keeps per-partition ordering identical to in-process use.
+
+    Requests are ``(op, args, kwargs)``; responses ``("ok", value)`` or
+    ``("err", exc_type_name, message)``. Malformed frames are counted in
+    ``frames_rejected`` and drop the offending connection only.
+    """
+
+    def __init__(self, broker: Broker, address: Any = ("127.0.0.1", 0),
+                 accept_poll: float = 0.1) -> None:
+        self.broker = broker
+        self._requested = address
+        self._accept_poll = accept_poll
+        self._listener: socket.socket | None = None
+        self._accept_thread: threading.Thread | None = None
+        self._conns: list[socket.socket] = []
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self.address: Any = None       # bound address, set by start()
+        self.requests_served = 0
+        self.frames_rejected = 0
+
+    # -- lifecycle ---------------------------------------------------------
+    def start(self) -> "BrokerServer":
+        listener = _make_socket(self._requested)
+        if not isinstance(self._requested, str):
+            listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        listener.bind(self._requested)
+        listener.listen(32)
+        listener.settimeout(self._accept_poll)
+        self._listener = listener
+        self.address = (self._requested if isinstance(self._requested, str)
+                        else listener.getsockname())
+        self._stop.clear()
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, daemon=True, name="broker-server")
+        self._accept_thread.start()
+        log.info("broker server listening on %s", self.address)
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._accept_thread is not None:
+            self._accept_thread.join(timeout=10)
+            self._accept_thread = None
+        if self._listener is not None:
+            self._listener.close()
+            self._listener = None
+        with self._lock:
+            conns, self._conns = self._conns, []
+        for conn in conns:
+            try:
+                conn.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            conn.close()
+
+    def __enter__(self) -> "BrokerServer":
+        return self.start() if self._listener is None else self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.stop()
+
+    # -- loops -------------------------------------------------------------
+    def _accept_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                conn, _ = self._listener.accept()
+            except socket.timeout:
+                continue
+            except OSError:
+                return                     # listener closed under us
+            with self._lock:
+                self._conns.append(conn)
+            threading.Thread(target=self._serve_conn, args=(conn,),
+                             daemon=True, name="broker-conn").start()
+
+    def _serve_conn(self, conn: socket.socket) -> None:
+        try:
+            while not self._stop.is_set():
+                try:
+                    payload = recv_frame(conn)
+                except FrameError as e:
+                    # Torn/corrupt input: reject the frame AND the stream —
+                    # after a bad header there is no resync point.
+                    with self._lock:
+                        self.frames_rejected += 1
+                    log.warning("rejecting connection: %s", e)
+                    return
+                if payload is None:
+                    return                 # client closed cleanly
+                send_frame(conn, _encode(self._dispatch(payload)))
+        except OSError:
+            pass                           # peer vanished mid-response
+        finally:
+            conn.close()
+            with self._lock:
+                if conn in self._conns:
+                    self._conns.remove(conn)
+
+    def _dispatch(self, payload: bytes) -> tuple:
+        try:
+            op, args, kwargs = _decode(payload)
+            if op not in _OPS:
+                raise ValueError(f"unknown op {op!r}")
+            with self._lock:
+                self.requests_served += 1
+            if op == "ping":
+                return ("ok", "pong")
+            return ("ok", getattr(self.broker, op)(*args, **kwargs))
+        except Exception as e:             # broker errors travel as frames
+            return ("err", type(e).__name__, str(e))
+
+
+def serve_broker(broker: Broker, address: Any = ("127.0.0.1", 0)
+                 ) -> BrokerServer:
+    """Start a :class:`BrokerServer`; returns it with ``.address`` bound."""
+    return BrokerServer(broker, address).start()
+
+
+# -- client ------------------------------------------------------------------
+
+_ERR_TYPES: dict[str, Callable[[str], Exception]] = {
+    "KeyError": KeyError, "ValueError": ValueError, "TypeError": TypeError,
+}
+
+
+class RemoteBroker:
+    """Client-side :class:`Broker` duck type backed by a :class:`BrokerServer`.
+
+    Every broker call is one request/response frame exchange under a lock
+    (callers on many threads serialize, preserving per-client order). On a
+    connection failure — server restart, torn frame, refused connect — the
+    client closes, waits ``retry_delay * 2**attempt`` and reconnects, up to
+    ``max_retries`` times, then raises :class:`TransportError`. A retried
+    ``produce`` whose ack was lost may duplicate the record: delivery is
+    at-least-once, and exactly-once is restored by idempotent sinks
+    (``docs/transport.md``).
+    """
+
+    def __init__(self, address: Any, connect_timeout: float = 5.0,
+                 max_retries: int = 5, retry_delay: float = 0.05) -> None:
+        self.address = address
+        self.connect_timeout = connect_timeout
+        self.max_retries = max_retries
+        self.retry_delay = retry_delay
+        self._sock: socket.socket | None = None
+        self._lock = threading.RLock()
+        self.reconnects = 0
+
+    # -- connection --------------------------------------------------------
+    def _connect(self) -> None:
+        sock = _make_socket(self.address)
+        sock.settimeout(self.connect_timeout)
+        try:
+            sock.connect(self.address)
+        except BaseException:
+            sock.close()
+            raise
+        sock.settimeout(None)
+        if isinstance(self.address, tuple):
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self._sock = sock
+
+    def _close(self) -> None:
+        if self._sock is not None:
+            self._sock.close()
+            self._sock = None
+
+    def close(self) -> None:
+        with self._lock:
+            self._close()
+
+    def __enter__(self) -> "RemoteBroker":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.close()
+
+    # -- request/response --------------------------------------------------
+    def _request(self, op: str, *args: Any, **kwargs: Any) -> Any:
+        request = _encode((op, args, kwargs))
+        if len(request) > MAX_FRAME_BYTES:
+            # permanent protocol violation, not a connectivity problem:
+            # no number of retries makes an oversized frame fit
+            raise FrameError(
+                f"{op} request of {len(request)} bytes exceeds the "
+                f"{MAX_FRAME_BYTES}-byte frame limit")
+        last: Exception | None = None
+        with self._lock:
+            for attempt in range(self.max_retries + 1):
+                try:
+                    if self._sock is None:
+                        self._connect()
+                        if attempt:
+                            self.reconnects += 1
+                    send_frame(self._sock, request)
+                    payload = recv_frame(self._sock)
+                    if payload is None:
+                        raise FrameError("server closed the connection")
+                    resp = _decode(payload)
+                except (OSError, FrameError) as e:
+                    last = e
+                    self._close()
+                    if attempt < self.max_retries:
+                        time.sleep(self.retry_delay * (2 ** attempt))
+                    continue
+                if resp[0] == "ok":
+                    return resp[1]
+                _, exc_name, message = resp
+                raise _ERR_TYPES.get(exc_name, TransportError)(message)
+        raise TransportError(
+            f"broker at {self.address!r} unreachable after "
+            f"{self.max_retries + 1} attempts: {last}") from last
+
+    # -- Broker surface ----------------------------------------------------
+    def ping(self) -> bool:
+        return self._request("ping") == "pong"
+
+    def create_topic(self, topic: str, partitions: int = 1) -> None:
+        self._request("create_topic", topic, partitions)
+
+    def topics(self) -> list[str]:
+        return self._request("topics")
+
+    def num_partitions(self, topic: str) -> int:
+        return self._request("num_partitions", topic)
+
+    def produce(self, topic: str, value: Any, key: bytes | None = None,
+                partition: int | None = None, timestamp: float = 0.0) -> int:
+        return self._request("produce", topic, value, key=key,
+                             partition=partition, timestamp=timestamp)
+
+    def read(self, rng: OffsetRange) -> list[Record]:
+        return self._request("read", rng)
+
+    def end_offset(self, topic: str, partition: int = 0) -> int:
+        return self._request("end_offset", topic, partition)
+
+    def end_offsets(self, topic: str) -> list[int]:
+        return self._request("end_offsets", topic)
+
+    def commit(self, topic: str, partition: int, offset: int) -> None:
+        self._request("commit", topic, partition, offset)
+
+    def committed(self, topic: str) -> list[int]:
+        return self._request("committed", topic)
+
+    def lag(self, topic: str) -> int:
+        return self._request("lag", topic)
+
+
+def parse_address(spec: str) -> Any:
+    """CLI helper: ``"host:port"`` → TCP tuple, anything else → Unix path."""
+    host, sep, port = spec.rpartition(":")
+    if sep and port.isdigit():
+        return (host or "127.0.0.1", int(port))
+    return spec

@@ -1,0 +1,386 @@
+"""Socket broker transport: framing, server/client parity, cross-process
+round trips, reconnect, concurrency, and torn-write rejection."""
+import multiprocessing as mp
+import os
+import socket
+import struct
+import threading
+import time
+import zlib
+
+import pytest
+
+from repro.core import (Broker, Context, InMemoryPartitionLog, OffsetRange,
+                        PartitionLog, StreamingContext)
+from repro.data.transport import (MAGIC, BrokerServer, FrameError,
+                                  RemoteBroker, TransportError, parse_address,
+                                  recv_frame, send_frame, serve_broker)
+
+
+# -- framing -----------------------------------------------------------------
+
+def _pair():
+    a, b = socket.socketpair()
+    a.settimeout(5)
+    b.settimeout(5)
+    return a, b
+
+
+def test_frame_roundtrip():
+    a, b = _pair()
+    for payload in (b"", b"x", os.urandom(70_000)):
+        send_frame(a, payload)
+        assert recv_frame(b) == payload
+    a.close()
+    assert recv_frame(b) is None          # clean EOF at a frame boundary
+    b.close()
+
+
+def test_torn_frame_rejected():
+    a, b = _pair()
+    header = struct.pack(">2sII", MAGIC, 100, zlib.crc32(b"irrelevant"))
+    a.sendall(header + b"only-16-bytes!!!")    # promises 100, delivers 16
+    a.close()
+    with pytest.raises(FrameError, match="torn frame"):
+        recv_frame(b)
+    b.close()
+
+
+def test_bad_magic_rejected():
+    a, b = _pair()
+    a.sendall(struct.pack(">2sII", b"ZZ", 4, 0) + b"data")
+    with pytest.raises(FrameError, match="bad magic"):
+        recv_frame(b)
+    a.close(); b.close()
+
+
+def test_checksum_mismatch_rejected():
+    a, b = _pair()
+    payload = b"detector-frame-bytes"
+    header = struct.pack(">2sII", MAGIC, len(payload),
+                         zlib.crc32(payload) ^ 0xDEAD)
+    a.sendall(header + payload)
+    with pytest.raises(FrameError, match="checksum"):
+        recv_frame(b)
+    a.close(); b.close()
+
+
+def test_oversized_length_rejected_before_alloc():
+    a, b = _pair()
+    a.sendall(struct.pack(">2sII", MAGIC, 1 << 31, 0))
+    with pytest.raises(FrameError, match="exceeds"):
+        recv_frame(b)
+    a.close(); b.close()
+
+
+def test_parse_address():
+    assert parse_address("10.0.0.7:9092") == ("10.0.0.7", 9092)
+    assert parse_address(":9092") == ("127.0.0.1", 9092)
+    assert parse_address("/tmp/broker.sock") == "/tmp/broker.sock"
+
+
+# -- PartitionLog protocol extraction ---------------------------------------
+
+class ListBackedLog:
+    """Minimal alternate PartitionLog: proves Broker only needs the protocol."""
+
+    def __init__(self):
+        self.rows = []
+        self._lock = threading.Lock()
+
+    def append(self, key, value, timestamp):
+        with self._lock:
+            from repro.core.broker import Record
+            self.rows.append(Record(key, value, len(self.rows), timestamp))
+            return len(self.rows) - 1
+
+    def read(self, start, until):
+        with self._lock:
+            return self.rows[start:min(until, len(self.rows))]
+
+    def end_offset(self):
+        with self._lock:
+            return len(self.rows)
+
+
+def test_partition_log_protocol():
+    assert isinstance(InMemoryPartitionLog(), PartitionLog)
+    assert isinstance(ListBackedLog(), PartitionLog)
+
+
+def test_broker_over_custom_log_factory():
+    b = Broker(log_factory=ListBackedLog)
+    b.create_topic("t", 2)
+    for i in range(6):
+        b.produce("t", i, partition=i % 2)
+    assert [r.value for r in b.read(OffsetRange("t", 0, 0, 9))] == [0, 2, 4]
+    assert b.end_offsets("t") == [3, 3]
+
+
+def test_broker_commit_monotonic_and_lag():
+    b = Broker()
+    b.create_topic("t", 2)
+    for i in range(10):
+        b.produce("t", i, partition=i % 2)
+    assert b.lag("t") == 10
+    b.commit("t", 0, 4)
+    b.commit("t", 0, 2)                   # replay never rewinds progress
+    b.commit("t", 1, 5)
+    assert b.committed("t") == [4, 5]
+    assert b.lag("t") == 1
+    with pytest.raises(KeyError):
+        b.commit("nope", 0, 1)
+
+
+# -- server/client parity ----------------------------------------------------
+
+@pytest.fixture
+def served(tmp_path):
+    broker = Broker()
+    server = serve_broker(broker, str(tmp_path / "broker.sock"))
+    client = RemoteBroker(server.address, max_retries=2, retry_delay=0.01)
+    yield broker, server, client
+    client.close()
+    server.stop()
+
+
+def test_remote_matches_local(served):
+    broker, server, client = served
+    assert client.ping()
+    client.create_topic("t", 3)
+    offs = [client.produce("t", {"i": i}, key=f"k{i}".encode(),
+                           partition=i % 3) for i in range(9)]
+    assert offs == [0, 0, 0, 1, 1, 1, 2, 2, 2]
+    assert client.topics() == broker.topics() == ["t"]
+    assert client.num_partitions("t") == 3
+    assert client.end_offsets("t") == broker.end_offsets("t") == [3, 3, 3]
+    assert client.end_offset("t", 1) == 3
+    recs = client.read(OffsetRange("t", 1, 0, 10))
+    assert [r.value for r in recs] == [{"i": 1}, {"i": 4}, {"i": 7}]
+    assert [r.offset for r in recs] == [0, 1, 2]
+    client.commit("t", 0, 3)
+    assert broker.committed("t") == [3, 0, 0]
+    assert client.lag("t") == broker.lag("t") == 6
+
+
+def test_remote_raises_broker_errors(served):
+    _, _, client = served
+    with pytest.raises(KeyError):
+        client.end_offsets("missing-topic")
+    client.create_topic("t")
+    with pytest.raises(ValueError):
+        client.create_topic("t")
+    assert client.ping()                  # connection survives error frames
+
+
+def test_remote_numpy_payloads(served):
+    np = pytest.importorskip("numpy")
+    _, _, client = served
+    client.create_topic("frames")
+    frame = np.arange(64 * 64, dtype=np.float32).reshape(64, 64)
+    client.produce("frames", (7, frame), key=b"frame-7")
+    (rec,) = client.read(OffsetRange("frames", 0, 0, 1))
+    idx, got = rec.value
+    assert idx == 7 and got.dtype == np.float32
+    np.testing.assert_array_equal(got, frame)
+
+
+# -- cross-process round trip ------------------------------------------------
+
+def _producer_main(address, n):
+    from repro.data.transport import RemoteBroker
+    client = RemoteBroker(address)
+    for i in range(n):
+        client.produce("xp", i, key=f"p{i}".encode(), partition=i % 2)
+    client.close()
+
+
+def test_append_read_across_processes(tmp_path):
+    broker = Broker()
+    broker.create_topic("xp", 2)
+    server = serve_broker(broker, ("127.0.0.1", 0))
+    try:
+        proc = mp.get_context("fork").Process(
+            target=_producer_main, args=(server.address, 40))
+        proc.start()
+        proc.join(timeout=30)
+        assert proc.exitcode == 0
+        assert sum(broker.end_offsets("xp")) == 40
+        evens = [r.value for r in broker.read(OffsetRange("xp", 0, 0, 99))]
+        assert evens == list(range(0, 40, 2))   # per-partition total order
+    finally:
+        server.stop()
+
+
+def test_streaming_consumer_over_remote_broker(tmp_path):
+    """The consumer side of the split: StreamingContext driven entirely
+    through RemoteBroker, commits landing on the served broker."""
+    broker = Broker()
+    server = serve_broker(broker, str(tmp_path / "b.sock"))
+    client = RemoteBroker(server.address)
+    try:
+        client.create_topic("t", 2)
+        for i in range(12):
+            client.produce("t", i, partition=i % 2)
+        sc = StreamingContext(Context(), client, max_records_per_partition=4)
+        sc.subscribe(["t"])
+        seen = []
+        sc.foreach_batch(lambda rdd, info: seen.extend(rdd.collect()))
+        sc.run_batches(3)
+        assert sorted(seen) == list(range(12))
+        assert broker.committed("t") == [6, 6]   # pushed over the wire
+        assert client.lag("t") == 0
+    finally:
+        client.close()
+        server.stop()
+
+
+# -- reconnect ---------------------------------------------------------------
+
+def test_client_reconnects_after_server_restart():
+    broker = Broker()
+    broker.create_topic("t")
+    server = serve_broker(broker, ("127.0.0.1", 0))
+    client = RemoteBroker(server.address, max_retries=6, retry_delay=0.05)
+    assert client.produce("t", "before") == 0
+    host, port = server.address
+    server.stop()
+    server2 = BrokerServer(broker, (host, port)).start()
+    try:
+        assert client.produce("t", "after") == 1      # transparent reconnect
+        assert client.reconnects >= 1
+        assert [r.value for r in broker.read(OffsetRange("t", 0, 0, 2))] == \
+            ["before", "after"]
+    finally:
+        client.close()
+        server2.stop()
+
+
+def test_retries_are_bounded():
+    client = RemoteBroker(("127.0.0.1", 1), connect_timeout=0.2,
+                          max_retries=1, retry_delay=0.01)
+    with pytest.raises(TransportError, match="unreachable after 2 attempts"):
+        client.ping()
+
+
+# -- concurrency -------------------------------------------------------------
+
+def test_concurrent_producers_one_topic(tmp_path):
+    broker = Broker()
+    broker.create_topic("t", 1)
+    server = serve_broker(broker, str(tmp_path / "b.sock"))
+    n_producers, per_producer = 4, 50
+    errors = []
+
+    def producer(pid):
+        try:
+            client = RemoteBroker(server.address)
+            for i in range(per_producer):
+                client.produce("t", (pid, i), key=f"{pid}-{i}".encode())
+            client.close()
+        except Exception as e:            # pragma: no cover - failure path
+            errors.append(e)
+
+    threads = [threading.Thread(target=producer, args=(p,))
+               for p in range(n_producers)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30)
+    server.stop()
+    assert not errors
+    recs = broker.read(OffsetRange("t", 0, 0, 10 ** 6))
+    assert len(recs) == n_producers * per_producer
+    assert [r.offset for r in recs] == list(range(len(recs)))  # dense log
+    for p in range(n_producers):          # each producer's order preserved
+        assert [v for pid, v in (r.value for r in recs) if pid == p] == \
+            list(range(per_producer))
+
+
+# -- torn writes against a live server --------------------------------------
+
+def test_server_rejects_garbage_and_survives(served):
+    _, server, client = served
+    client.create_topic("t")
+    client.produce("t", 1)
+    # a rogue/corrupt peer: valid header promising more bytes than sent
+    rogue = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+    rogue.connect(server.address)
+    rogue.sendall(struct.pack(">2sII", MAGIC, 500, 0) + b"short")
+    rogue.close()
+    # and one speaking a different protocol entirely
+    rogue2 = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+    rogue2.connect(server.address)
+    rogue2.sendall(b"GET / HTTP/1.1\r\n\r\n")
+    rogue2.close()
+    deadline = time.monotonic() + 5
+    while server.frames_rejected < 2 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert server.frames_rejected == 2
+    assert client.produce("t", 2) == 1    # healthy clients unaffected
+    assert client.end_offsets("t") == [2]
+
+
+# -- hardening from review ---------------------------------------------------
+
+def test_wire_unpickler_refuses_dangerous_globals(served):
+    """A well-formed frame whose pickle smuggles a callable must be refused
+    before instantiation — the server answers with an error, runs nothing."""
+    import pickle
+
+    from repro.data.transport import _decode
+
+    evil = pickle.dumps((os.system, ("echo pwned",)))
+    with pytest.raises(FrameError, match="refusing to unpickle"):
+        _decode(evil)
+
+    _, server, client = served
+    rogue = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+    rogue.settimeout(5)
+    rogue.connect(server.address)
+    send_frame(rogue, evil)
+    resp = recv_frame(rogue)
+    rogue.close()
+    status, exc_name, message = __import__("pickle").loads(resp)
+    assert status == "err" and "refusing to unpickle" in message
+    assert client.ping()                  # server healthy, nothing executed
+
+
+def test_oversized_request_fails_fast_no_retries(served, monkeypatch):
+    import repro.data.transport as tr
+    _, _, client = served
+    client.create_topic("t")
+    monkeypatch.setattr(tr, "MAX_FRAME_BYTES", 1024)
+    with pytest.raises(FrameError, match="exceeds"):
+        client.produce("t", b"x" * 4096)
+    assert client.reconnects == 0         # rejected before any send/retry
+    monkeypatch.undo()
+    assert client.produce("t", b"small") == 0
+
+
+def test_commit_rejects_bad_partition_and_offset(served):
+    broker, _, client = served
+    client.create_topic("t", 2)
+    client.produce("t", 1, partition=0)
+    for bad in [("t", -1, 1), ("t", 2, 1), ("t", 0, -1), ("t", 0, 5)]:
+        with pytest.raises(ValueError):
+            client.commit(*bad)
+    assert broker.committed("t") == [0, 0]   # nothing poisoned
+    client.commit("t", 0, 1)
+    assert broker.committed("t") == [1, 0]
+
+
+def test_ingest_add_tolerates_create_race():
+    """Two producers' check-then-create on one topic must not kill the
+    loser (the topic appearing between topics() and create_topic)."""
+    from repro.data import IngestConfig, IngestRunner, SyntheticRateSource
+
+    class RacyBroker(Broker):
+        def topics(self):
+            return []                     # always claims the topic is absent
+
+    broker = RacyBroker()
+    runner = IngestRunner(broker)
+    runner.add(SyntheticRateSource(rate=1e9, total=1), IngestConfig(topic="t"))
+    runner.add(SyntheticRateSource(rate=1e9, total=1), IngestConfig(topic="t"))
+    assert Broker.topics(broker) == ["t"]

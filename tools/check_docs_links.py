@@ -1,0 +1,54 @@
+"""Docs link integrity: every ``docs/*.md`` referenced from README (and from
+other docs) must exist, and every file in ``docs/`` must be reachable from
+README — otherwise the doc is dead weight nobody can find.
+
+Run by ``make deps-check``. Exits non-zero with one line per problem.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DOC_REF = re.compile(r"docs/[A-Za-z0-9_\-./]+?\.md")
+
+
+def refs_in(path: str) -> set[str]:
+    with open(path, encoding="utf-8") as f:
+        return set(DOC_REF.findall(f.read()))
+
+
+def main() -> int:
+    problems: list[str] = []
+    readme = os.path.join(REPO, "README.md")
+    if not os.path.exists(readme):
+        print("FAIL: README.md missing")
+        return 1
+
+    docs_dir = os.path.join(REPO, "docs")
+    doc_files = {f"docs/{name}" for name in os.listdir(docs_dir)
+                 if name.endswith(".md")}
+
+    # forward: references resolve
+    sources = [readme] + [os.path.join(REPO, d) for d in sorted(doc_files)]
+    for src in sources:
+        for ref in sorted(refs_in(src)):
+            if not os.path.exists(os.path.join(REPO, ref)):
+                rel = os.path.relpath(src, REPO)
+                problems.append(f"{rel} references {ref}, which does not exist")
+
+    # reverse: every doc is reachable from README
+    for doc in sorted(doc_files - refs_in(readme)):
+        problems.append(f"{doc} exists but README.md never references it")
+
+    for p in problems:
+        print(f"FAIL: {p}")
+    if not problems:
+        print(f"docs links ok ({len(doc_files)} docs, all referenced from "
+              "README and resolving)")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
