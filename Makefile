@@ -5,20 +5,25 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-data test-transport bench examples deps-check
+.PHONY: test test-data test-transport bench bench-check examples deps-check
 
 test:           ## tier-1: full suite, stop at first failure
 	$(PYTHON) -m pytest -x -q
 
-test-data:      ## just the data subsystem
+test-data:      ## just the data subsystem (sources/sinks/windows/broker/durability)
 	$(PYTHON) -m pytest -q tests/test_data_sources.py tests/test_data_sinks.py \
-	    tests/test_data_window.py tests/test_broker_dstream.py
+	    tests/test_data_window.py tests/test_broker_dstream.py \
+	    tests/test_broker_parity.py tests/test_durable_log.py
 
-test-transport: ## socket broker transport (framing, reconnect, cross-process)
-	$(PYTHON) -m pytest -q tests/test_transport.py
+test-transport: ## socket broker transport (framing properties, reconnect, cross-process)
+	$(PYTHON) -m pytest -q tests/test_transport.py tests/test_transport_frames.py \
+	    tests/test_broker_parity.py
 
 bench:          ## CSV benchmark sweep (includes bench_ingest)
 	$(PYTHON) -m benchmarks.run
+
+bench-check:    ## regression guard: batched produce_many >= 3x per-record produce
+	$(PYTHON) -m benchmarks.run --check
 
 examples:       ## fast end-to-end example runs
 	$(PYTHON) examples/ptycho_pipeline.py --fast

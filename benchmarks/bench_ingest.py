@@ -1,17 +1,26 @@
-"""Ingest path: source -> broker -> micro-batch throughput, and backpressure
-behavior under overload (the near-real-time criterion stressed past its
-breaking point instead of only at the happy path).
+"""Ingest path: source -> broker -> micro-batch throughput, the transport
+fast path, and backpressure behavior under overload (the near-real-time
+criterion stressed past its breaking point instead of only at the happy
+path).
 
-Four measurements:
+Six measurements:
   1. ingest/source_to_batch — raw records/s through SyntheticRateSource ->
-     IngestRunner -> broker -> StreamingContext micro-batches.
+     IngestRunner -> broker -> StreamingContext micro-batches (in-process).
   2. ingest/remote_transport — the same end-to-end path with every produce,
      offset query and commit crossing the socket transport (RemoteBroker ->
-     BrokerServer over a Unix domain socket): the per-record cost of the
-     multi-host topology vs. measurement 1's shared-memory baseline.
-  3. ingest/backpressure_drop — a rate-limited (slow) pipeline fed ~10x over
+     BrokerServer over a Unix domain socket), *one round trip per record*
+     (flush_records=1): the PR 2 baseline the fast path is measured against.
+  3. ingest/produce_many — measurement 2 with batched produce: polled
+     records flush through produce_many, one frame per batch. The regression
+     guard (`benchmarks/run.py --check`, `make bench-check`) asserts this
+     beats measurement 2 on records/s.
+  4. ingest/zero_copy — batched produce with 64x64 float32 detector-style
+     frames as values; array payloads cross the socket as raw-buffer array
+     frames (no pickle of the bytes). The derived column compares the same
+     workload with array frames disabled (every frame pickled).
+  5. ingest/backpressure_drop — a rate-limited (slow) pipeline fed ~10x over
      capacity with the drop policy: lag stays bounded, overload is shed.
-  4. ingest/backpressure_sample — same overload with the sample policy: the
+  6. ingest/backpressure_sample — same overload with the sample policy: the
      stream thins (every k-th record survives) but stays ordered and bounded.
 """
 from __future__ import annotations
@@ -23,7 +32,7 @@ import time
 from benchmarks.common import emit, time_call
 
 
-def _throughput(records: int, batch: int) -> None:
+def _throughput(records: int, batch: int) -> float:
     from repro.core import Broker, Context, StreamingContext
     from repro.data import IngestConfig, IngestRunner, SyntheticRateSource
 
@@ -48,43 +57,114 @@ def _throughput(records: int, batch: int) -> None:
     emit("ingest/source_to_batch", sec / records,
          f"{records} records end-to-end in {sec:.3f}s; "
          f"throughput {records / sec:.0f} rec/s")
+    return records / sec
 
 
-def _remote_throughput(records: int, batch: int) -> None:
-    """Measurement 1 with the broker behind the socket transport: the ingest
-    thread speaks RemoteBroker, the consumer commits after every batch, and
-    backpressure lag is computed server-side from those commits."""
+def _remote_once(records: int, batch: int, flush_records: int,
+                 value_fn=None) -> None:
+    """One end-to-end run with the broker behind the socket transport: the
+    ingest thread speaks RemoteBroker, the consumer commits after every
+    batch, and backpressure lag is computed server-side from those commits."""
     from repro.core import Broker, Context, StreamingContext
     from repro.data import (IngestConfig, IngestRunner, RemoteBroker,
                             SyntheticRateSource, serve_broker)
 
-    def once() -> None:
-        path = os.path.join(tempfile.mkdtemp(prefix="bench-broker-"), "b.sock")
-        broker = Broker()
-        server = serve_broker(broker, path)
-        remote = RemoteBroker(server.address)
-        sc = StreamingContext(Context(), broker,
-                              max_records_per_partition=batch // 2)
-        runner = IngestRunner(remote, consumer=remote)
-        src = SyntheticRateSource(rate=1e9, total=records)
-        runner.add(src, IngestConfig(topic="t", partitions=2,
-                                     poll_batch=batch, max_pending=4 * batch))
-        sc.subscribe(["t"])
-        sc.foreach_batch(lambda rdd, info: rdd.count())
-        runner.start()
-        while not runner.done or sc.lag("t") > 0:
-            if sc.run_one_batch() is None:
-                time.sleep(0.0005)
-        runner.stop()
-        remote.close()
-        server.stop()
-        os.unlink(path)
-        assert sum(b.num_records for b in sc.history) == records
+    path = os.path.join(tempfile.mkdtemp(prefix="bench-broker-"), "b.sock")
+    broker = Broker()
+    server = serve_broker(broker, path)
+    remote = RemoteBroker(server.address)
+    sc = StreamingContext(Context(), broker,
+                          max_records_per_partition=batch // 2)
+    runner = IngestRunner(remote, consumer=remote)
+    src = SyntheticRateSource(rate=1e9, total=records, value_fn=value_fn)
+    runner.add(src, IngestConfig(topic="t", partitions=2, poll_batch=batch,
+                                 max_pending=4 * batch,
+                                 flush_records=flush_records))
+    sc.subscribe(["t"])
+    sc.foreach_batch(lambda rdd, info: rdd.count())
+    runner.start()
+    while not runner.done or sc.lag("t") > 0:
+        if sc.run_one_batch() is None:
+            time.sleep(0.0005)
+    runner.stop()
+    remote.close()
+    server.stop()
+    os.unlink(path)
+    assert sum(b.num_records for b in sc.history) == records
 
-    sec = time_call(once, repeats=3)
+
+def _remote_throughput(records: int, batch: int) -> float:
+    """Measurement 2: one produce round trip per record (PR 2 baseline)."""
+    sec = time_call(lambda: _remote_once(records, batch, flush_records=1),
+                    repeats=3)
     emit("ingest/remote_transport", sec / records,
-         f"{records} records through the Unix-socket broker in {sec:.3f}s; "
+         f"{records} records through the Unix-socket broker in {sec:.3f}s, "
+         f"per-record produce; throughput {records / sec:.0f} rec/s")
+    return records / sec
+
+
+def _produce_many_throughput(records: int, batch: int) -> float:
+    """Measurement 3: the batched fast path (one frame per flush)."""
+    sec = time_call(lambda: _remote_once(records, batch, flush_records=batch),
+                    repeats=3)
+    emit("ingest/produce_many", sec / records,
+         f"{records} records through the Unix-socket broker in {sec:.3f}s, "
+         f"batched produce_many (flush={batch}); "
          f"throughput {records / sec:.0f} rec/s")
+    return records / sec
+
+
+def _zero_copy_once(records: int, batch: int, value_fn) -> None:
+    """Producer-side hot path only: IngestRunner pumping ndarray payloads
+    into a remote broker over the Unix socket, batched, no consumer — the
+    transport cost of the detector stream in isolation (the consumer drain
+    rate is an order of magnitude above it and would only add scheduling
+    noise to the measurement)."""
+    from repro.core import Broker
+    from repro.data import (IngestConfig, IngestRunner, RemoteBroker,
+                            SyntheticRateSource, serve_broker)
+
+    path = os.path.join(tempfile.mkdtemp(prefix="bench-broker-"), "b.sock")
+    broker = Broker()
+    server = serve_broker(broker, path)
+    remote = RemoteBroker(server.address)
+    runner = IngestRunner(remote)       # no consumer: measure arrival rate
+    src = SyntheticRateSource(rate=1e9, total=records, value_fn=value_fn)
+    runner.add(src, IngestConfig(topic="t", partitions=2, poll_batch=batch,
+                                 max_pending=1 << 30, flush_records=batch))
+    runner.run_inline()
+    remote.close()
+    server.stop()
+    os.unlink(path)
+    assert sum(broker.end_offsets("t")) == records
+
+
+def _zero_copy_throughput(records: int, batch: int, edge: int = 64) -> float:
+    """Measurement 4: ndarray payloads; array frames on vs off."""
+    import numpy as np
+
+    import repro.data.transport as tr
+
+    frame = np.random.default_rng(0).standard_normal(
+        (edge, edge)).astype(np.float32)
+    value_fn = frame.__mul__            # fresh array per record, same bytes
+    mb = records * frame.nbytes / 1e6
+
+    sec = time_call(lambda: _zero_copy_once(records, batch, value_fn),
+                    repeats=3)
+    saved = tr.USE_ARRAY_FRAMES
+    tr.USE_ARRAY_FRAMES = False
+    try:
+        sec_pickle = time_call(
+            lambda: _zero_copy_once(records, batch, value_fn), repeats=3)
+    finally:
+        tr.USE_ARRAY_FRAMES = saved
+    emit("ingest/zero_copy", sec / records,
+         f"{records} {edge}x{edge} f32 frames ({mb:.0f} MB) over the socket "
+         f"in {sec:.3f}s ({mb / sec:.0f} MB/s, {records / sec:.0f} rec/s) vs "
+         f"{sec_pickle:.3f}s pickled ({records / sec_pickle:.0f} rec/s); "
+         f"array-frame speedup {sec_pickle / sec:.2f}x")
+    return records / sec
 
 
 def _backpressure(policy: str, records: int = 2000,
@@ -125,11 +205,30 @@ def _backpressure(policy: str, records: int = 2000,
          f"graceful={max(max_lag, m.max_observed_lag) <= bound and shed > 0}")
 
 
-def run(records: int = 20000, batch: int = 200) -> None:
-    _throughput(records, batch)
-    _remote_throughput(records // 4, batch)
+def run(records: int = 20000, batch: int = 200) -> dict[str, float]:
+    rates = {
+        "ingest/source_to_batch": _throughput(records, batch),
+        "ingest/remote_transport": _remote_throughput(records // 4, batch),
+        "ingest/produce_many": _produce_many_throughput(records, batch),
+        "ingest/zero_copy": _zero_copy_throughput(2000, batch),
+    }
     _backpressure("drop")
     _backpressure("sample")
+    return rates
+
+
+def check(records: int = 8000, batch: int = 200, min_ratio: float = 3.0
+          ) -> bool:
+    """Fast-path regression guard (`benchmarks/run.py --check`): batched
+    produce_many must beat per-record produce on records/s by min_ratio."""
+    per_record = _remote_throughput(records // 4, batch)
+    batched = _produce_many_throughput(records, batch)
+    ratio = batched / per_record
+    ok = ratio >= min_ratio
+    print(f"# produce_many {batched:.0f} rec/s vs per-record "
+          f"{per_record:.0f} rec/s = {ratio:.2f}x "
+          f"(required >= {min_ratio}x): {'OK' if ok else 'REGRESSION'}")
+    return ok
 
 
 if __name__ == "__main__":

@@ -8,14 +8,33 @@
 
 Prints ``name,us_per_call,derived`` CSV. Roofline numbers for the LM cells
 come from the dry-run artifacts (launch/roofline.py), not from here.
+
+``--check`` runs only the transport fast-path regression guard: batched
+``ingest/produce_many`` must beat per-record ``ingest/remote_transport`` on
+records/s (exit 1 on regression; ``make bench-check`` wires it into CI).
 """
 from __future__ import annotations
 
+import argparse
+import sys
 import traceback
 
 
-def main() -> None:
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--check", action="store_true",
+                    help="fast-path regression guard only: assert batched "
+                         "produce beats per-record produce, exit 1 if not")
+    ap.add_argument("--check-ratio", type=float, default=3.0,
+                    help="minimum produce_many / remote_transport records/s "
+                         "ratio for --check (default 3.0)")
+    args = ap.parse_args(argv)
+
     print("name,us_per_call,derived")
+    if args.check:
+        from benchmarks import bench_ingest
+        return 0 if bench_ingest.check(min_ratio=args.check_ratio) else 1
+
     from benchmarks import (bench_allreduce, bench_ingest, bench_ptycho,
                             bench_streaming, bench_tomo)
     for mod in (bench_allreduce, bench_ptycho, bench_tomo, bench_streaming,
@@ -25,7 +44,8 @@ def main() -> None:
         except Exception:
             print(f"{mod.__name__},nan,FAILED: "
                   + traceback.format_exc().strip().splitlines()[-1])
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -13,10 +13,13 @@ its beamline/cluster deployment (and its ZeroMQ future-work item):
         broker-side)                               closing the backpressure loop
 
 The producer never shares memory with the consumer: every frame crosses the
-length-prefixed socket transport (``docs/transport.md``), and the producer's
-backpressure is bounded against what the consumer has *processed*, not what
-it has buffered. Swap ``--addr host:port`` for a reachable interface and the
-two halves run on different machines unchanged.
+length-prefixed socket transport (``docs/transport.md``) on its fast path —
+detector frames are ndarrays, so they ride zero-copy *array frames* (raw
+dtype/shape + bytes, no pickle), and the runner batches them through
+``produce_many`` (one socket round trip per flush, not per frame). The
+producer's backpressure is bounded against what the consumer has
+*processed*, not what it has buffered. Swap ``--addr host:port`` for a
+reachable interface and the two halves run on different machines unchanged.
 
 Run:  PYTHONPATH=src python examples/remote_ingest.py --frames 96
       PYTHONPATH=src python examples/remote_ingest.py --addr /tmp/broker.sock
@@ -52,10 +55,13 @@ def produce_frames(address, frames: int, obj_size: int, probe_size: int,
                                     policy="block", max_pending=max_pending,
                                     poll_batch=16))
     runner.run_inline(timeout=120)
+    m = runner.metrics[0]
     print(f"[producer pid={os.getpid()}] pumped "
-          f"{runner.metrics[0].produced}/{len(source)} frames, "
-          f"blocked {runner.metrics[0].blocked_s:.2f}s on backpressure, "
-          f"max lag seen {runner.metrics[0].max_observed_lag}")
+          f"{m.produced}/{len(source)} frames in "
+          f"{m.produce_calls} batched produce calls "
+          f"(~{m.produced / max(m.produce_calls, 1):.0f} frames/round trip), "
+          f"blocked {m.blocked_s:.2f}s on backpressure, "
+          f"max lag seen {m.max_observed_lag}")
     remote.close()
 
 

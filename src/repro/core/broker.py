@@ -8,9 +8,12 @@ offsets; no ordering across partitions; messages are (key, value) byte pairs.
 ``OffsetRange`` reads.
 
 Storage is factored behind the :class:`PartitionLog` protocol
-(``append``/``read``/``end_offset``): :class:`Broker` composes one log per
-(topic, partition) and never looks inside. :class:`InMemoryPartitionLog` is
-the single-host default; the multi-host path serves the *whole broker* over a
+(``append``/``read``/``end_offset``, plus optional ``append_many`` for the
+batched :meth:`Broker.produce_many` path): :class:`Broker` composes one log
+per (topic, partition) and never looks inside. :class:`InMemoryPartitionLog`
+is the single-host default; :class:`~repro.data.durable_log
+.DurablePartitionLog` keeps the log on disk across broker restarts (Kafka's
+segment files); the multi-host path serves the *whole broker* over a
 socket instead (``repro.data.transport``: :class:`~repro.data.transport
 .BrokerServer` in the consumer process, :class:`~repro.data.transport
 .RemoteBroker` — same duck type as :class:`Broker` — in each producer), so
@@ -36,7 +39,9 @@ backpressure) or inline via ``StreamingContext.subscribe_source``.
 """
 from __future__ import annotations
 
+import inspect
 import threading
+import zlib
 from dataclasses import dataclass
 from typing import Any, Callable, Protocol, Sequence, runtime_checkable
 
@@ -105,27 +110,60 @@ class InMemoryPartitionLog:
 _PartitionLog = InMemoryPartitionLog
 
 
+def _route_partition(key: Any, partitions: int) -> int:
+    """Key -> partition. Bytes keys route by CRC-32, which is *stable across
+    processes and restarts* — Python's hash() is salted per process, and with
+    a durable log a salted route would strand a key's replayed history on a
+    different partition than its new records."""
+    if key is None:
+        return 0
+    if isinstance(key, (bytes, bytearray, memoryview)):
+        return zlib.crc32(bytes(key)) % partitions
+    return hash(key) % partitions
+
+
+def _factory_wants_location(factory: Callable) -> bool:
+    """Does ``factory`` accept ``(topic=, partition=)``? Durable logs need to
+    know *which* partition they store (their on-disk directory is derived
+    from it); zero-arg factories like :class:`InMemoryPartitionLog` don't."""
+    try:
+        inspect.signature(factory).bind(topic="", partition=0)
+        return True
+    except (TypeError, ValueError):
+        return False
+
+
 class Broker:
     """Topics → partitions → append-only :class:`PartitionLog` s. Thread-safe.
 
     ``log_factory`` picks the storage implementation per partition
-    (:class:`InMemoryPartitionLog` unless told otherwise).
+    (:class:`InMemoryPartitionLog` unless told otherwise). A factory may be
+    zero-argument, or accept ``(topic, partition)`` keywords — the broker
+    passes the location to factories that want it, which is how
+    :class:`~repro.data.durable_log.DurableLogFactory` maps partitions onto
+    stable on-disk directories that survive a broker restart.
     """
 
-    def __init__(self, log_factory: Callable[[], PartitionLog] | None = None
+    def __init__(self, log_factory: Callable[..., PartitionLog] | None = None
                  ) -> None:
-        self._log_factory: Callable[[], PartitionLog] = (
+        self._log_factory: Callable[..., PartitionLog] = (
             log_factory or InMemoryPartitionLog)
+        self._locate_logs = _factory_wants_location(self._log_factory)
         self._topics: dict[str, list[PartitionLog]] = {}
         self._committed: dict[str, list[int]] = {}
         self._lock = threading.Lock()
+
+    def _new_log(self, topic: str, partition: int) -> PartitionLog:
+        if self._locate_logs:
+            return self._log_factory(topic=topic, partition=partition)
+        return self._log_factory()
 
     def create_topic(self, topic: str, partitions: int = 1) -> None:
         with self._lock:
             if topic in self._topics:
                 raise ValueError(f"topic {topic!r} exists")
-            self._topics[topic] = [self._log_factory()
-                                   for _ in range(partitions)]
+            self._topics[topic] = [self._new_log(topic, p)
+                                   for p in range(partitions)]
             self._committed[topic] = [0] * partitions
 
     def topics(self) -> list[str]:
@@ -146,8 +184,54 @@ class Broker:
                 partition: int | None = None, timestamp: float = 0.0) -> int:
         logs = self._topic(topic)
         if partition is None:
-            partition = (hash(key) if key is not None else 0) % len(logs)
+            partition = _route_partition(key, len(logs))
         return logs[partition].append(key, value, timestamp)
+
+    def produce_many(self, topic: str, pairs: Sequence[tuple],
+                     partition: int | None = None, timestamp: float = 0.0
+                     ) -> list[int]:
+        """Append a batch of ``(key, value)`` pairs; returns their offsets in
+        input order.
+
+        Argument validation is all-or-nothing: an unknown topic, an
+        out-of-range ``partition`` or a malformed pair raises *before any
+        record is appended*. Once appends start, a storage-layer failure can
+        leave a committed prefix — retrying the whole batch (what
+        ``RemoteBroker`` does on a lost ack) duplicates records, which the
+        idempotent-by-key sinks absorb: delivery is at-least-once per batch.
+        With an explicit ``partition``, storage backends exposing
+        ``append_many`` (the durable log) get the whole batch in one call —
+        one disk write + fsync instead of one per record.
+        """
+        logs = self._topic(topic)
+        if partition is not None and not 0 <= partition < len(logs):
+            raise ValueError(
+                f"partition {partition} out of range for topic {topic!r} "
+                f"({len(logs)} partitions)")
+        batch = []
+        for pair in pairs:
+            try:
+                key, value = pair
+            except (TypeError, ValueError):
+                raise ValueError(
+                    f"produce_many pair must be (key, value), got {pair!r}")
+            if partition is None:
+                try:
+                    p = _route_partition(key, len(logs))
+                except TypeError:          # unhashable non-bytes key: fail
+                    raise ValueError(      # the batch BEFORE any append
+                        f"produce_many key {key!r} is not routable "
+                        "(unhashable); pass an explicit partition")
+            else:
+                p = partition
+            batch.append((key, value, p))
+        if partition is not None:
+            plog = logs[partition]
+            append_many = getattr(plog, "append_many", None)
+            if append_many is not None:
+                return list(append_many([(k, v) for k, v, _ in batch],
+                                        timestamp))
+        return [logs[p].append(k, v, timestamp) for k, v, p in batch]
 
     # -- consumer ---------------------------------------------------------
     def read(self, rng: OffsetRange) -> list[Record]:

@@ -31,11 +31,16 @@ Class                             Reproduces
                                   over TCP / Unix sockets to other processes
 ``transport.RemoteBroker``        Kafka client / paper's ZeroMQ direction:
                                   the ``Broker`` surface spoken over a socket
+``durable_log.DurablePartitionLog``  Kafka's on-disk log segments: records
+                                  survive a broker restart, torn tails are
+                                  truncated by the recovery scan
 ================================  =============================================
 
 All sinks are idempotent by key, upgrading the dstream layer's at-least-once
 replay to exactly-once end-to-end.
 """
+from repro.data.durable_log import (DurableLogFactory, DurablePartitionLog,
+                                    LogCorruptionError)
 from repro.data.ingest import (IngestConfig, IngestRunner, SourceMetrics,
                                ingest_all)
 from repro.data.sinks import (CallbackSink, KeyedSink, MetricsSink,
@@ -59,4 +64,5 @@ __all__ = [
     "CallbackSink", "describe_result_items", "fan_out",
     "BrokerServer", "RemoteBroker", "serve_broker", "parse_address",
     "TransportError", "FrameError",
+    "DurablePartitionLog", "DurableLogFactory", "LogCorruptionError",
 ]

@@ -23,6 +23,14 @@ The runner is transport-agnostic: ``broker`` may be the in-process
 same client as ``consumer=`` (it exposes ``lag()`` computed from the offsets
 the consumer committed broker-side), and producer backpressure keeps working
 across the process/host boundary.
+
+Produce is *batched*: polled records buffer per source and flush through
+``broker.produce_many`` (one call per partition) when ``flush_records`` /
+``flush_bytes`` worth have accumulated or the oldest buffered record ages
+past ``flush_interval``. Over the socket transport that amortizes one frame
+per batch instead of one round trip per record — the dominant cost PR 2's
+``ingest/remote_transport`` benchmark exposed. Buffered records count
+against ``max_pending``, so the backpressure bounds are unchanged.
 """
 from __future__ import annotations
 
@@ -49,14 +57,24 @@ class IngestConfig:
     policy: str = "block"          # block | drop | sample when over max_pending
     # Bound on produced-but-unconsumed records. "block" never exceeds it;
     # "drop"/"sample" check at poll granularity, so the observed lag is
-    # bounded by max_pending + poll_batch.
+    # bounded by max_pending + poll_batch. Records buffered for a batched
+    # produce count against the bound (the runner subtracts them from room).
     max_pending: int = 1024
     sample_stride: int = 4         # "sample": keep 1 of every stride records
     rate_limit: float | None = None  # producer-side cap, records/s
+    # Batched produce: polled records buffer until one of these trips, then
+    # flush as one produce_many per partition (one transport frame instead of
+    # one per record — the fast path bench_ingest prices). flush_records=1
+    # restores PR 2's per-record produce.
+    flush_records: int = 64        # flush when this many records buffered
+    flush_bytes: int = 1 << 20     # ... or the buffered payload estimate hits
+    flush_interval: float = 0.02   # ... or the oldest buffered record ages out
 
     def __post_init__(self) -> None:
         if self.policy not in POLICIES:
             raise ValueError(f"policy {self.policy!r} not in {POLICIES}")
+        if self.flush_records < 1:
+            raise ValueError("flush_records must be >= 1")
 
 
 @dataclass
@@ -67,6 +85,7 @@ class SourceMetrics:
     dropped: int = 0
     sampled_out: int = 0
     polls: int = 0
+    produce_calls: int = 0         # broker produce/produce_many round trips
     blocked_s: float = 0.0
     started_at: float = 0.0
     last_produce_at: float = 0.0
@@ -81,9 +100,20 @@ class SourceMetrics:
     def as_dict(self) -> dict:
         return {"topic": self.topic, "produced": self.produced,
                 "dropped": self.dropped, "sampled_out": self.sampled_out,
-                "polls": self.polls, "blocked_s": round(self.blocked_s, 4),
+                "polls": self.polls, "produce_calls": self.produce_calls,
+                "blocked_s": round(self.blocked_s, 4),
                 "throughput_rec_per_s": round(self.throughput, 1),
                 "max_observed_lag": self.max_observed_lag}
+
+
+def _estimate_bytes(value) -> int:
+    """Cheap payload-size estimate for the flush_bytes threshold."""
+    nbytes = getattr(value, "nbytes", None)
+    if nbytes is not None:
+        return int(nbytes)
+    if isinstance(value, (bytes, bytearray, memoryview, str)):
+        return len(value)
+    return 64
 
 
 @dataclass
@@ -92,6 +122,10 @@ class _Entry:
     config: IngestConfig
     metrics: SourceMetrics
     rr: int = 0                    # round-robin partition cursor
+    partitions: int = 1            # cached topic partition count (see add())
+    buf: list = field(default_factory=list)   # (key, value, partition)
+    buf_bytes: int = 0
+    buf_oldest: float = 0.0        # monotonic time of oldest buffered record
 
 
 class IngestRunner:
@@ -128,7 +162,10 @@ class IngestRunner:
                 # way the topic exists now, which is all add() needs
                 pass
         m = SourceMetrics(topic=config.topic)
-        self._entries.append(_Entry(source, config, m))
+        # partition count is immutable per topic: query once, not per poll
+        # (over RemoteBroker that query is a full round trip)
+        n = self.broker.num_partitions(config.topic)
+        self._entries.append(_Entry(source, config, m, partitions=n))
         return m
 
     @property
@@ -141,29 +178,64 @@ class IngestRunner:
 
         A source reports ``exhausted`` the moment its last ``poll`` returns,
         which is *before* those records reach the broker — a visible window
-        when produce crosses a socket (RemoteBroker). Reading ``exhausted``
-        first and the pump-in-progress flag second closes it: if the flag is
-        clear after exhaustion was observed, the pump that drained the source
-        has fully produced.
+        when produce crosses a socket (RemoteBroker), and wider still with
+        batched produce (records sit in the flush buffer). Reading
+        ``exhausted`` first, then the buffers, then the pump-in-progress flag
+        closes it: if the flag is clear and the buffers are empty after
+        exhaustion was observed, the pump that drained the source has fully
+        produced.
         """
         exhausted = all(e.source.exhausted for e in self._entries)
-        return exhausted and not self._pumping
+        flushed = all(not e.buf for e in self._entries)
+        return exhausted and flushed and not self._pumping
 
     # -- one pump step -----------------------------------------------------
     def _produce(self, e: _Entry, records) -> None:
-        logs_n = self.broker.num_partitions(e.config.topic)
+        """Buffer polled records for a batched flush; flush immediately when
+        a size threshold trips (the deadline is pump()'s job)."""
+        if not records:
+            return
+        cfg = e.config
         now = time.monotonic()
         for key, value in records:
-            self.broker.produce(e.config.topic, value, key=key,
-                                partition=e.rr % logs_n, timestamp=now)
+            if not e.buf:
+                e.buf_oldest = now
+            e.buf.append((key, value, e.rr % e.partitions))
+            e.buf_bytes += _estimate_bytes(value)
             e.rr += 1
-        e.metrics.produced += len(records)
-        if records:
-            e.metrics.last_produce_at = now
+            if (len(e.buf) >= cfg.flush_records
+                    or e.buf_bytes >= cfg.flush_bytes):
+                self._flush(e, now)
+
+    def _flush(self, e: _Entry, now: float | None = None) -> int:
+        """Hand the buffered records to the broker: one ``produce_many`` per
+        partition (one transport frame each), preserving per-partition order.
+        Returns the number of records flushed."""
+        if not e.buf:
+            return 0
+        buf, e.buf, e.buf_bytes = e.buf, [], 0
+        now = time.monotonic() if now is None else now
+        by_partition: dict[int, list] = {}
+        for key, value, partition in buf:
+            by_partition.setdefault(partition, []).append((key, value))
+        produce_many = getattr(self.broker, "produce_many", None)
+        for partition, pairs in by_partition.items():
+            if produce_many is not None and len(pairs) > 1:
+                produce_many(e.config.topic, pairs, partition=partition,
+                             timestamp=now)
+            else:
+                for key, value in pairs:
+                    self.broker.produce(e.config.topic, value, key=key,
+                                        partition=partition, timestamp=now)
+            e.metrics.produce_calls += (1 if produce_many is not None
+                                        and len(pairs) > 1 else len(pairs))
+        e.metrics.produced += len(buf)
+        e.metrics.last_produce_at = now
+        return len(buf)
 
     def _pump_one(self, e: _Entry) -> int:
         """Poll one source once, apply rate limit + backpressure policy.
-        Returns records produced (for idle detection)."""
+        Returns records polled into the pipeline (for idle detection)."""
         src, cfg, m = e.source, e.config, e.metrics
         if src.exhausted:
             return 0
@@ -173,14 +245,19 @@ class IngestRunner:
         if cfg.rate_limit is not None:
             elapsed = time.monotonic() - m.started_at
             due = int(cfg.rate_limit * elapsed) + 1
-            want = min(want, max(0, due - m.produced))
+            want = min(want, max(0, due - m.produced - len(e.buf)))
             if want == 0:
                 return 0
         lag = self._lag_of(cfg.topic)
         m.max_observed_lag = max(m.max_observed_lag, lag)
-        room = cfg.max_pending - lag
+        # records buffered for the next flush are already claimed pipeline
+        # room: count them, or batching would overshoot max_pending
+        room = cfg.max_pending - lag - len(e.buf)
         if room <= 0:
             if cfg.policy == "block":
+                # the broker may still have space the buffer is holding;
+                # push the buffer through so the consumer sees it, then wait
+                self._flush(e)
                 m.blocked_s += self._idle_sleep
                 return 0                  # do not poll; source waits
             records = src.poll(want)
@@ -191,7 +268,7 @@ class IngestRunner:
             # sample: thin to 1/stride, hard-capped so lag never exceeds
             # max_pending + poll_batch even when the consumer is stalled
             kept = records[::cfg.sample_stride]
-            hard_room = cfg.max_pending + cfg.poll_batch - lag
+            hard_room = cfg.max_pending + cfg.poll_batch - lag - len(e.buf)
             kept = kept[:max(0, hard_room)]
             m.sampled_out += len(records) - len(kept)
             self._produce(e, kept)
@@ -204,10 +281,19 @@ class IngestRunner:
         return len(records)
 
     def pump(self) -> int:
-        """One round over all sources; returns total records produced."""
+        """One round over all sources; returns total records moved (polled
+        into the pipeline or flushed to the broker)."""
         self._pumping = True
         try:
-            return sum(self._pump_one(e) for e in self._entries)
+            moved = sum(self._pump_one(e) for e in self._entries)
+            now = time.monotonic()
+            for e in self._entries:
+                # deadline flush: no record waits in the buffer past
+                # flush_interval, and an exhausted source drains immediately
+                if e.buf and (e.source.exhausted
+                              or now - e.buf_oldest >= e.config.flush_interval):
+                    moved += self._flush(e, now)
+            return moved
         finally:
             self._pumping = False
 

@@ -8,9 +8,9 @@ interpreter. This module crosses that boundary the way Alchemist crosses the
 Spark↔MPI one — a socket-based data service:
 
 - :class:`BrokerServer` owns a local :class:`~repro.core.broker.Broker` and
-  serves its surface (``create_topic``/``produce``/``read``/``end_offset``/
-  ``commit``/…) over TCP or a Unix domain socket, one handler thread per
-  client connection.
+  serves its surface (``create_topic``/``produce``/``produce_many``/``read``/
+  ``end_offset``/``commit``/…) over TCP or a Unix domain socket, one handler
+  thread per client connection.
 - :class:`RemoteBroker` is a client implementing the same duck type as
   :class:`~repro.core.broker.Broker`, so ``IngestRunner``,
   ``StreamingContext`` and ``TopicSource`` work across processes/hosts
@@ -18,12 +18,25 @@ Spark↔MPI one — a socket-based data service:
 
 Wire format (``docs/transport.md`` has the full story): every message is one
 *frame* — a fixed header ``magic(2B) | length(u32) | crc32(u32)`` followed by
-``length`` payload bytes (a pickled message). A frame whose magic, length or
-checksum does not hold is *rejected*, not guessed at: a torn or corrupt write
-kills that connection and the client re-establishes and retries. Retries give
-at-least-once delivery (a ``produce`` whose ack was lost may be re-sent);
-the data layer's idempotent-by-key sinks restore exactly-once downstream,
-the same contract the in-process path already has.
+``length`` payload bytes. A frame whose magic, length or checksum does not
+hold is *rejected*, not guessed at: a torn or corrupt write kills that
+connection and the client re-establishes and retries. Retries give
+at-least-once delivery (a ``produce``/``produce_many`` whose ack was lost may
+be re-sent — the *whole batch*, in the batched case); the data layer's
+idempotent-by-key sinks restore exactly-once downstream, the same contract
+the in-process path already has.
+
+The frame payload itself carries a one-byte *message kind*:
+
+- ``P`` — the message is a restricted-pickle blob (containers, scalars,
+  broker record types; see :func:`register_safe`).
+- ``A`` — an *array frame*: the message skeleton is still restricted pickle,
+  but every contiguous ndarray's bytes travel as raw out-of-band buffers
+  after the skeleton (pickle protocol 5 buffer references: the skeleton holds
+  only dtype/shape/contiguity, the payload region holds the bytes). Arrays
+  skip pickling entirely on encode — the buffers are sent straight from the
+  array memory — and on decode they are reconstructed as views over the
+  received frame buffer: zero copy on the detector/projection hot path.
 
 Delivery/ordering semantics match the in-process broker: per-partition total
 order (one handler thread executes one client's requests in order; the log
@@ -51,6 +64,18 @@ MAGIC = b"\xabK"                       # 2 bytes: frame sync marker
 _HEADER = struct.Struct(">2sII")       # magic | payload length | crc32
 MAX_FRAME_BYTES = 256 * 1024 * 1024    # reject absurd lengths before alloc
 
+# Message kinds: first payload byte. P = restricted pickle; A = array frame
+# (pickled skeleton + raw out-of-band ndarray buffers, layout below).
+KIND_PICKLE = b"P"
+KIND_ARRAY = b"A"
+# Array frame body, after the kind byte:
+#   u32 skeleton_len | u32 nbufs | nbufs x u64 buf_len | skeleton | buf0 ...
+_ARRAY_HEADER = struct.Struct(">II")
+
+# Flip to False to force every ndarray through the pickle path (the PR 2
+# behavior) — benchmarks use this to price the array fast path.
+USE_ARRAY_FRAMES = True
+
 # Address = ("host", port) for TCP, or "path.sock" for a Unix domain socket.
 Address = "tuple[str, int] | str"
 
@@ -62,11 +87,12 @@ class TransportError(RuntimeError):
 
 class FrameError(TransportError):
     """The byte stream is not a well-formed frame (bad magic, bad checksum,
-    torn write). The connection carrying it must be dropped."""
+    torn write, undecodable message). The connection carrying it must be
+    dropped."""
 
 
-def send_frame(sock: socket.socket, payload: bytes) -> None:
-    """Write one length-prefixed, checksummed frame."""
+def send_frame(sock: socket.socket, payload) -> None:
+    """Write one length-prefixed, checksummed frame of raw ``payload`` bytes."""
     if len(payload) > MAX_FRAME_BYTES:
         # fail fast on the sending side: the receiver would reject it anyway,
         # and a retry loop can never make an oversized payload fit
@@ -76,27 +102,30 @@ def send_frame(sock: socket.socket, payload: bytes) -> None:
     sock.sendall(header + payload)
 
 
-def _recv_exact(sock: socket.socket, n: int, *, at_boundary: bool) -> bytes | None:
-    """Read exactly ``n`` bytes. Clean EOF *at a frame boundary* returns
-    ``None`` (peer closed between frames); EOF anywhere else is a torn frame.
-    """
-    chunks: list[bytes] = []
+def _recv_exact(sock: socket.socket, n: int, *, at_boundary: bool
+                ) -> bytearray | None:
+    """Read exactly ``n`` bytes into a fresh *writable* buffer. Clean EOF *at
+    a frame boundary* returns ``None`` (peer closed between frames); EOF
+    anywhere else is a torn frame. The buffer is writable so that arrays
+    decoded zero-copy over it stay mutable downstream."""
+    buf = bytearray(n)
+    view = memoryview(buf)
     got = 0
     while got < n:
-        chunk = sock.recv(min(n - got, 1 << 20))
-        if not chunk:
+        r = sock.recv_into(view[got:], n - got)
+        if r == 0:
             if at_boundary and got == 0:
                 return None
             raise FrameError(
                 f"torn frame: connection closed after {got}/{n} bytes")
-        chunks.append(chunk)
-        got += len(chunk)
-    return b"".join(chunks)
+        got += r
+    return buf
 
 
-def recv_frame(sock: socket.socket) -> bytes | None:
-    """Read one frame; ``None`` on clean EOF. Raises :class:`FrameError` on
-    torn writes, bad magic, oversized lengths, or checksum mismatch."""
+def recv_frame(sock: socket.socket) -> bytearray | None:
+    """Read one frame's payload; ``None`` on clean EOF. Raises
+    :class:`FrameError` on torn writes, bad magic, oversized lengths, or
+    checksum mismatch."""
     raw = _recv_exact(sock, _HEADER.size, at_boundary=True)
     if raw is None:
         return None
@@ -109,10 +138,6 @@ def recv_frame(sock: socket.socket) -> bytes | None:
     if zlib.crc32(payload) != crc:
         raise FrameError("checksum mismatch (corrupt frame)")
     return payload
-
-
-def _encode(obj: Any) -> bytes:
-    return pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
 
 
 # Payloads arrive from the network, and pickle.loads on untrusted bytes is
@@ -152,8 +177,134 @@ class _RestrictedUnpickler(pickle.Unpickler):
             "(not in the transport allow-list; see register_safe)")
 
 
-def _decode(payload: bytes) -> Any:
-    return _RestrictedUnpickler(io.BytesIO(payload)).load()
+def _restricted_load(data, buffers=None) -> Any:
+    return _RestrictedUnpickler(io.BytesIO(data), buffers=buffers).load()
+
+
+# -- message layer: kind byte + optional raw array region --------------------
+
+def _nbytes(part) -> int:
+    return part.nbytes if isinstance(part, memoryview) else len(part)
+
+
+def encode_message(obj: Any) -> list:
+    """Encode one message into frame-payload *parts* (bytes/memoryviews whose
+    concatenation is the payload). With :data:`USE_ARRAY_FRAMES`, contiguous
+    ndarrays anywhere in ``obj`` are emitted as raw out-of-band buffers — the
+    returned memoryviews alias the arrays, nothing is copied."""
+    if not USE_ARRAY_FRAMES:
+        return [KIND_PICKLE
+                + pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)]
+    bufs: list[memoryview] = []
+
+    def keep_out_of_band(pb: pickle.PickleBuffer):
+        try:
+            m = pb.raw()               # flat byte view; raises if
+        except BufferError:            # non-contiguous -> stay in-band
+            return True
+        bufs.append(m)
+        return False
+
+    skeleton = pickle.dumps(obj, protocol=5, buffer_callback=keep_out_of_band)
+    if not bufs:
+        return [KIND_PICKLE + skeleton]
+    head = KIND_ARRAY + _ARRAY_HEADER.pack(len(skeleton), len(bufs)) \
+        + struct.pack(f">{len(bufs)}Q", *(m.nbytes for m in bufs))
+    return [head, skeleton, *bufs]
+
+
+def decode_message(payload) -> Any:
+    """Decode one frame payload (either message kind). Raises
+    :class:`FrameError` for anything malformed — unknown kind, region lengths
+    that do not add up, undecodable pickle — never returns garbage. Arrays in
+    ``A`` messages are reconstructed as zero-copy views over ``payload``
+    (pass a writable buffer, e.g. from :func:`recv_frame`, to keep them
+    mutable). The flip side of zero copy: every such array keeps the *whole*
+    frame buffer alive — consumers that cherry-pick one array out of a large
+    multi-record frame and retain it long-term should ``np.copy()`` it."""
+    view = memoryview(payload)
+    if view.nbytes == 0:
+        raise FrameError("empty message payload")
+    kind, body = bytes(view[:1]), view[1:]
+    try:
+        if kind == KIND_PICKLE:
+            return _restricted_load(body)
+        if kind == KIND_ARRAY:
+            if body.nbytes < _ARRAY_HEADER.size:
+                raise FrameError("array message too short for its header")
+            skeleton_len, nbufs = _ARRAY_HEADER.unpack_from(body, 0)
+            lens_end = _ARRAY_HEADER.size + 8 * nbufs
+            if lens_end > body.nbytes:
+                raise FrameError("array message too short for buffer lengths")
+            lens = struct.unpack_from(f">{nbufs}Q", body, _ARRAY_HEADER.size)
+            if lens_end + skeleton_len + sum(lens) != body.nbytes:
+                raise FrameError("array message region lengths do not add up")
+            skeleton = body[lens_end:lens_end + skeleton_len]
+            bufs, pos = [], lens_end + skeleton_len
+            for n in lens:
+                bufs.append(body[pos:pos + n])
+                pos += n
+            return _restricted_load(skeleton, bufs)
+        raise FrameError(f"unknown message kind {kind!r}")
+    except FrameError:
+        raise
+    except Exception as e:             # torn pickle, struct error, ...
+        raise FrameError(f"undecodable {kind!r} message: {e}") from e
+
+
+def _message_checksum(parts) -> tuple[int, int]:
+    total, crc = 0, 0
+    for p in parts:
+        total += _nbytes(p)
+        crc = zlib.crc32(p, crc)
+    return total, crc
+
+
+_HAVE_SENDMSG = hasattr(socket.socket, "sendmsg")
+_IOV_BATCH = 512                       # stay safely under IOV_MAX (1024)
+
+
+def _send_parts(sock: socket.socket, parts, total: int, crc: int) -> None:
+    """One frame from pre-encoded parts. The header and small parts coalesce
+    into one send; array buffers go straight from the array memory via
+    scatter-gather ``sendmsg`` (one syscall per ~512 buffers, no copies)."""
+    header = _HEADER.pack(MAGIC, total, crc)
+    if len(parts) == 1:
+        sock.sendall(header + parts[0])
+        return
+    views = [memoryview(header + parts[0] + parts[1])]
+    views += [(b if isinstance(b, memoryview) else memoryview(b)).cast("B")
+              for b in parts[2:]]
+    if not _HAVE_SENDMSG:               # pragma: no cover - non-POSIX
+        for v in views:
+            sock.sendall(v)
+        return
+    while views:
+        sent = sock.sendmsg(views[:_IOV_BATCH])
+        while views and sent >= views[0].nbytes:
+            sent -= views[0].nbytes
+            views.pop(0)
+        if sent:                        # partial buffer: resume mid-view
+            views[0] = views[0][sent:]
+
+
+def send_message(sock: socket.socket, obj: Any) -> None:
+    """Encode ``obj`` (array-aware) and send it as one frame."""
+    parts = encode_message(obj)
+    total, crc = _message_checksum(parts)
+    if total > MAX_FRAME_BYTES:
+        raise FrameError(f"message of {total} bytes exceeds the "
+                         f"{MAX_FRAME_BYTES}-byte frame limit")
+    _send_parts(sock, parts, total, crc)
+
+
+def recv_message(sock: socket.socket) -> Any:
+    """Receive and decode one message; ``None`` on clean EOF (broker
+    messages are always tuples, so ``None`` is unambiguous)."""
+    payload = recv_frame(sock)
+    if payload is None:
+        return None
+    return decode_message(payload)
 
 
 def _make_socket(address: Any) -> socket.socket:
@@ -166,8 +317,8 @@ def _make_socket(address: Any) -> socket.socket:
 # The server executes exactly these broker methods; anything else is an error
 # frame, never an attribute lookup on the broker (no remote getattr).
 _OPS = frozenset({
-    "create_topic", "topics", "num_partitions", "produce", "read",
-    "end_offset", "end_offsets", "commit", "committed", "lag", "ping",
+    "create_topic", "topics", "num_partitions", "produce", "produce_many",
+    "read", "end_offset", "end_offsets", "commit", "committed", "lag", "ping",
 })
 
 
@@ -268,7 +419,16 @@ class BrokerServer:
                     return
                 if payload is None:
                     return                 # client closed cleanly
-                send_frame(conn, _encode(self._dispatch(payload)))
+                try:
+                    send_message(conn, self._dispatch(payload))
+                except FrameError:
+                    # response too large for one frame: tell the client
+                    # instead of dying silently (e.g. a read() of a huge
+                    # offset range; the client should narrow it)
+                    send_message(conn, (
+                        "err", "FrameError",
+                        f"response exceeds the {MAX_FRAME_BYTES}-byte "
+                        f"frame limit; narrow the request"))
         except OSError:
             pass                           # peer vanished mid-response
         finally:
@@ -277,9 +437,9 @@ class BrokerServer:
                 if conn in self._conns:
                     self._conns.remove(conn)
 
-    def _dispatch(self, payload: bytes) -> tuple:
+    def _dispatch(self, payload) -> tuple:
         try:
-            op, args, kwargs = _decode(payload)
+            op, args, kwargs = decode_message(payload)
             if op not in _OPS:
                 raise ValueError(f"unknown op {op!r}")
             with self._lock:
@@ -312,9 +472,9 @@ class RemoteBroker:
     connection failure — server restart, torn frame, refused connect — the
     client closes, waits ``retry_delay * 2**attempt`` and reconnects, up to
     ``max_retries`` times, then raises :class:`TransportError`. A retried
-    ``produce`` whose ack was lost may duplicate the record: delivery is
-    at-least-once, and exactly-once is restored by idempotent sinks
-    (``docs/transport.md``).
+    ``produce``/``produce_many`` whose ack was lost may duplicate the record
+    (or the whole batch): delivery is at-least-once, and exactly-once is
+    restored by idempotent sinks (``docs/transport.md``).
     """
 
     def __init__(self, address: Any, connect_timeout: float = 5.0,
@@ -358,12 +518,13 @@ class RemoteBroker:
 
     # -- request/response --------------------------------------------------
     def _request(self, op: str, *args: Any, **kwargs: Any) -> Any:
-        request = _encode((op, args, kwargs))
-        if len(request) > MAX_FRAME_BYTES:
+        parts = encode_message((op, args, kwargs))
+        total, crc = _message_checksum(parts)
+        if total > MAX_FRAME_BYTES:
             # permanent protocol violation, not a connectivity problem:
             # no number of retries makes an oversized frame fit
             raise FrameError(
-                f"{op} request of {len(request)} bytes exceeds the "
+                f"{op} request of {total} bytes exceeds the "
                 f"{MAX_FRAME_BYTES}-byte frame limit")
         last: Exception | None = None
         with self._lock:
@@ -373,11 +534,11 @@ class RemoteBroker:
                         self._connect()
                         if attempt:
                             self.reconnects += 1
-                    send_frame(self._sock, request)
+                    _send_parts(self._sock, parts, total, crc)
                     payload = recv_frame(self._sock)
                     if payload is None:
                         raise FrameError("server closed the connection")
-                    resp = _decode(payload)
+                    resp = decode_message(payload)
                 except (OSError, FrameError) as e:
                     last = e
                     self._close()
@@ -407,7 +568,37 @@ class RemoteBroker:
 
     def produce(self, topic: str, value: Any, key: bytes | None = None,
                 partition: int | None = None, timestamp: float = 0.0) -> int:
+        """Append one record; returns its partition-local offset.
+
+        One request/response round trip per record — the per-record cost
+        `bench_ingest` prices as ``ingest/remote_transport``. Hot paths
+        should batch with :meth:`produce_many` instead (one frame per batch).
+        Delivery is at-least-once: a retry whose ack was lost appends the
+        record twice; idempotent-by-key sinks dedupe downstream.
+        """
         return self._request("produce", topic, value, key=key,
+                             partition=partition, timestamp=timestamp)
+
+    def produce_many(self, topic: str, pairs, partition: int | None = None,
+                     timestamp: float = 0.0) -> list[int]:
+        """Append a batch of ``(key, value)`` pairs in one round trip;
+        returns their offsets in input order.
+
+        This is the transport fast path: the whole batch crosses the socket
+        as one frame (an array frame when values hold ndarrays — detector
+        frames skip pickle entirely), amortizing framing and latency across
+        the batch. Semantics:
+
+        - **Validation is all-or-nothing**: an unknown topic, bad partition
+          or malformed pair fails the whole batch server-side with nothing
+          appended.
+        - **Delivery is at-least-once per batch**: if the ack is lost and the
+          request retried, the *entire batch* may append twice. The sinks'
+          idempotency-by-key still restores exactly-once downstream, exactly
+          as for single ``produce`` retries.
+        - Per-partition order within the batch follows pair order.
+        """
+        return self._request("produce_many", topic, list(pairs),
                              partition=partition, timestamp=timestamp)
 
     def read(self, rng: OffsetRange) -> list[Record]:

@@ -1,0 +1,295 @@
+"""DurablePartitionLog: persistence, segment roll, recovery-scan truncation
+of torn/corrupt tails, orphan handling, and a real SIGKILL mid-produce crash
+(spawn-context child, like ``examples/remote_ingest.py``'s producer).
+
+The recovery contract: whatever survives is a dense, garbage-free *prefix*
+of what was appended — committed records never vanish behind later
+corruption, torn bytes never surface as records.
+"""
+import glob
+import multiprocessing as mp
+import os
+import signal
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (Broker, Context, OffsetRange, PartitionLog,
+                        StreamingContext)
+from repro.data.durable_log import (DurableLogFactory, DurablePartitionLog,
+                                    LogCorruptionError)
+
+
+def _seg_files(path):
+    return sorted(glob.glob(os.path.join(path, "*.seg")))
+
+
+# -- basics ------------------------------------------------------------------
+
+def test_protocol_and_roundtrip(tmp_path):
+    log = DurablePartitionLog(str(tmp_path / "p0"))
+    assert isinstance(log, PartitionLog)
+    assert log.end_offset() == 0
+    assert log.append(b"k0", {"v": 0}, 1.5) == 0
+    assert log.append(None, "plain", 2.5) == 1
+    recs = log.read(0, 10)
+    assert [(r.key, r.value, r.offset, r.timestamp) for r in recs] == \
+        [(b"k0", {"v": 0}, 0, 1.5), (None, "plain", 1, 2.5)]
+    assert log.read(1, 2)[0].value == "plain"
+    log.close()
+
+
+def test_reopen_recovers_records(tmp_path):
+    path = str(tmp_path / "p0")
+    with DurablePartitionLog(path) as log:
+        for i in range(20):
+            log.append(str(i).encode(), i, float(i))
+    reopened = DurablePartitionLog(path)
+    assert reopened.recovered_records == 20
+    assert reopened.truncated_bytes == 0
+    assert reopened.end_offset() == 20
+    assert [r.value for r in reopened.read(0, 99)] == list(range(20))
+    # appends continue the offset space after recovery
+    assert reopened.append(None, "next", 0.0) == 20
+    reopened.close()
+
+
+def test_append_many_and_segment_roll(tmp_path):
+    path = str(tmp_path / "p0")
+    log = DurablePartitionLog(path, segment_bytes=512)
+    offs = log.append_many([(None, f"value-{i:04d}") for i in range(40)], 1.0)
+    assert offs == list(range(40))
+    offs2 = log.append_many([(b"k", i) for i in range(40, 50)], 2.0)
+    assert offs2 == list(range(40, 50))
+    assert log.append_many([], 0.0) == []
+    assert len(_seg_files(path)) > 1       # rolled past 512 bytes
+    assert log.segments > 1
+    vals = [r.value for r in log.read(0, 999)]
+    assert vals == [f"value-{i:04d}" for i in range(40)] \
+        + list(range(40, 50))              # reads span segments
+    log.close()
+    reopened = DurablePartitionLog(path, segment_bytes=512)
+    assert reopened.end_offset() == 50
+    assert [r.value for r in reopened.read(38, 42)] == \
+        ["value-0038", "value-0039", 40, 41]
+    reopened.close()
+
+
+def test_ndarray_values_on_disk(tmp_path):
+    """Values hit the segments in the transport's array-frame encoding and
+    come back equal and writable."""
+    path = str(tmp_path / "p0")
+    frame = np.arange(64, dtype=np.float32).reshape(8, 8)
+    with DurablePartitionLog(path) as log:
+        log.append(b"f0", (0, frame), 0.0)
+    with DurablePartitionLog(path) as log:
+        (rec,) = log.read(0, 1)
+        idx, got = rec.value
+        np.testing.assert_array_equal(got, frame)
+        assert got.flags.writeable
+
+
+def test_oversized_record_refused_at_append(tmp_path, monkeypatch):
+    """The recovery scan treats frames past MAX_FRAME_BYTES as corruption,
+    so such a record must be refused at append time — committing it and
+    destroying it (plus everything after) on the next open would be worse."""
+    import repro.data.durable_log as dl
+
+    monkeypatch.setattr(dl, "MAX_FRAME_BYTES", 1024)
+    with DurablePartitionLog(str(tmp_path / "p0")) as log:
+        log.append(None, "fits", 0.0)
+        with pytest.raises(ValueError, match="exceeds"):
+            log.append(None, "x" * 4096, 0.0)
+        with pytest.raises(ValueError, match="exceeds"):
+            log.append_many([(None, "small"), (None, "y" * 4096)], 0.0)
+        assert log.end_offset() == 1       # nothing partial committed
+    monkeypatch.undo()
+    reopened = DurablePartitionLog(str(tmp_path / "p0"))
+    assert reopened.end_offset() == 1      # and reopen keeps everything
+    assert reopened.truncated_bytes == 0
+    reopened.close()
+
+
+def test_fsync_policies(tmp_path):
+    for policy in ("always", "interval", "never"):
+        with DurablePartitionLog(str(tmp_path / policy), fsync=policy) as log:
+            assert log.append_many([(None, i) for i in range(5)], 0.0) == \
+                list(range(5))
+    with pytest.raises(ValueError):
+        DurablePartitionLog(str(tmp_path / "bad"), fsync="sometimes")
+
+
+# -- recovery: torn tails and corruption ------------------------------------
+
+def test_torn_tail_truncated_on_open(tmp_path):
+    path = str(tmp_path / "p0")
+    with DurablePartitionLog(path) as log:
+        for i in range(5):
+            log.append(None, f"rec-{i}", 0.0)
+    (seg,) = _seg_files(path)
+    clean_size = os.path.getsize(seg)
+    with open(seg, "ab") as f:             # a produce died mid-write
+        f.write(b"\x00\x00\x00\x30TORN-FRAME-ONLY-PARTIALLY-WRIT")
+    log = DurablePartitionLog(path)
+    assert log.truncated_bytes > 0
+    assert os.path.getsize(seg) == clean_size
+    assert log.end_offset() == 5
+    assert [r.value for r in log.read(0, 99)] == [f"rec-{i}" for i in range(5)]
+    assert log.append(None, "after-recovery", 0.0) == 5
+    log.close()
+
+
+def test_bit_flip_truncates_to_valid_prefix(tmp_path):
+    """A flipped bit mid-file costs the suffix, never correctness: the scan
+    keeps every record before the corruption and nothing after."""
+    path = str(tmp_path / "p0")
+    with DurablePartitionLog(path) as log:
+        for i in range(10):
+            log.append(str(i).encode(), {"i": i, "pad": "x" * 50}, 0.0)
+    (seg,) = _seg_files(path)
+    blob = bytearray(open(seg, "rb").read())
+    blob[len(blob) // 2] ^= 0x10
+    with open(seg, "wb") as f:
+        f.write(blob)
+    log = DurablePartitionLog(path)
+    n = log.end_offset()
+    assert 0 < n < 10                      # prefix survived, suffix cut
+    assert log.truncated_bytes > 0
+    for r in log.read(0, n):               # and the prefix is pristine
+        assert r.value == {"i": r.offset, "pad": "x" * 50}
+        assert r.key == str(r.offset).encode()
+    log.close()
+
+
+def test_corrupt_early_segment_orphans_later_ones(tmp_path):
+    """Offsets must stay dense: segments after a corrupt one cannot rejoin
+    the log; they are set aside as .orphan, not silently re-entered."""
+    path = str(tmp_path / "p0")
+    with DurablePartitionLog(path, segment_bytes=256) as log:
+        for i in range(30):
+            log.append(None, f"value-{i:04d}", 0.0)
+    segs = _seg_files(path)
+    assert len(segs) >= 3
+    blob = bytearray(open(segs[0], "rb").read())
+    blob[len(blob) // 2] ^= 0x01
+    with open(segs[0], "wb") as f:
+        f.write(blob)
+    log = DurablePartitionLog(path, segment_bytes=256)
+    n = log.end_offset()
+    assert 0 < n < 30
+    assert log.orphaned_segments == len(segs) - 1
+    assert glob.glob(os.path.join(path, "*.orphan*"))
+    assert [r.value for r in log.read(0, n)] == \
+        [f"value-{i:04d}" for i in range(n)]
+    # appends land after the recovered prefix and survive another reopen
+    log.append(None, "post", 0.0)
+    log.close()
+    reopened = DurablePartitionLog(path, segment_bytes=256)
+    assert reopened.end_offset() == n + 1
+    assert reopened.read(n, n + 1)[0].value == "post"
+    reopened.close()
+
+
+def test_read_detects_corruption_under_live_log(tmp_path):
+    """Corruption that lands *after* recovery accepted a record surfaces as
+    LogCorruptionError on read — never a garbage record."""
+    path = str(tmp_path / "p0")
+    log = DurablePartitionLog(path)
+    log.append(None, "x" * 200, 0.0)
+    (seg,) = _seg_files(path)
+    with open(seg, "r+b") as f:
+        f.seek(40)
+        f.write(b"\xff")
+    with pytest.raises(LogCorruptionError):
+        log.read(0, 1)
+    log.close()
+
+
+# -- factory + broker restart ------------------------------------------------
+
+def test_factory_maps_topic_partition_dirs(tmp_path):
+    factory = DurableLogFactory(str(tmp_path / "wal"))
+    broker = Broker(log_factory=factory)
+    broker.create_topic("alpha", 2)
+    broker.create_topic("beta")
+    broker.produce("alpha", 1, partition=1)
+    assert factory.topics_on_disk() == {"alpha": 2, "beta": 1}
+    assert os.path.isdir(os.path.join(str(tmp_path / "wal"), "alpha", "p0001"))
+    for evil in ("", "..", "a/b", "a\x00b"):
+        with pytest.raises(ValueError):
+            factory(topic=evil, partition=0)
+
+
+def test_broker_restart_replays_to_fresh_subscriber(tmp_path):
+    """The acceptance path: produce through a durable broker, 'restart' it
+    (new Broker over the same root), and a fresh StreamingContext subscriber
+    replays every record."""
+    root = str(tmp_path / "wal")
+    frame = np.arange(16, dtype=np.float32)
+    b1 = Broker(log_factory=DurableLogFactory(root))
+    b1.create_topic("frames", 2)
+    b1.produce_many("frames", [(f"k{i}".encode(), (i, frame * i))
+                               for i in range(9)], partition=0)
+    for i in range(9, 12):
+        b1.produce("frames", (i, frame * i), partition=1)
+
+    factory = DurableLogFactory(root)      # the restarted process
+    b2 = Broker(log_factory=factory)
+    assert factory.restore(b2) == ["frames"]
+    assert b2.end_offsets("frames") == [9, 3]
+
+    sc = StreamingContext(Context(), b2, max_records_per_partition=4)
+    sc.subscribe(["frames"])
+    seen = []
+    sc.foreach_batch(lambda rdd, info: seen.extend(rdd.collect()))
+    while sc.lag("frames") > 0:
+        sc.run_one_batch()
+    assert sorted(i for i, _ in seen) == list(range(12))
+    for i, arr in seen:
+        np.testing.assert_array_equal(arr, frame * i)
+
+
+# -- crash: SIGKILL mid-produce ----------------------------------------------
+
+def _crash_producer(root: str) -> None:
+    """Child process: append records as fast as possible until killed."""
+    from repro.core import Broker as B
+    from repro.data.durable_log import DurableLogFactory as F
+    broker = B(log_factory=F(root, fsync="never"))
+    broker.create_topic("t", 1)
+    i = 0
+    while True:
+        broker.produce("t", {"i": i, "pad": "x" * 100},
+                       key=str(i).encode(), timestamp=float(i))
+        i += 1
+
+
+def test_sigkill_mid_produce_keeps_committed_prefix(tmp_path):
+    root = str(tmp_path / "wal")
+    proc = mp.get_context("spawn").Process(target=_crash_producer,
+                                           args=(root,), daemon=True)
+    proc.start()
+    seg = os.path.join(root, "t", "p0000", "00000000.seg")
+    deadline = time.monotonic() + 60
+    while time.monotonic() < deadline:
+        if os.path.exists(seg) and os.path.getsize(seg) > 20_000:
+            break
+        time.sleep(0.01)
+    else:
+        proc.kill()
+        pytest.fail("producer never wrote enough data")
+    os.kill(proc.pid, signal.SIGKILL)      # no goodbye, mid-produce
+    proc.join(timeout=30)
+
+    factory = DurableLogFactory(root)
+    broker = Broker(log_factory=factory)
+    assert factory.restore(broker) == ["t"]
+    n = broker.end_offset("t", 0)
+    assert n > 50                          # committed records survived...
+    recs = broker.read(OffsetRange("t", 0, 0, n))
+    assert [r.value["i"] for r in recs] == list(range(n))   # ...densely...
+    for r in recs:                         # ...and uncorrupted
+        assert r.key == str(r.value["i"]).encode()
+        assert r.value["pad"] == "x" * 100
+        assert r.timestamp == float(r.value["i"])

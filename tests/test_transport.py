@@ -328,11 +328,11 @@ def test_wire_unpickler_refuses_dangerous_globals(served):
     before instantiation — the server answers with an error, runs nothing."""
     import pickle
 
-    from repro.data.transport import _decode
+    from repro.data.transport import KIND_PICKLE, decode_message
 
-    evil = pickle.dumps((os.system, ("echo pwned",)))
+    evil = KIND_PICKLE + pickle.dumps((os.system, ("echo pwned",)))
     with pytest.raises(FrameError, match="refusing to unpickle"):
-        _decode(evil)
+        decode_message(evil)
 
     _, server, client = served
     rogue = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
@@ -341,7 +341,7 @@ def test_wire_unpickler_refuses_dangerous_globals(served):
     send_frame(rogue, evil)
     resp = recv_frame(rogue)
     rogue.close()
-    status, exc_name, message = __import__("pickle").loads(resp)
+    status, exc_name, message = decode_message(resp)
     assert status == "err" and "refusing to unpickle" in message
     assert client.ping()                  # server healthy, nothing executed
 
@@ -368,6 +368,68 @@ def test_commit_rejects_bad_partition_and_offset(served):
     assert broker.committed("t") == [0, 0]   # nothing poisoned
     client.commit("t", 0, 1)
     assert broker.committed("t") == [1, 0]
+
+
+# -- batched produce over the wire -------------------------------------------
+
+def test_ingest_batches_produce_over_remote(tmp_path):
+    """IngestRunner's flush buffer amortizes the socket: ~1 produce_many per
+    (partition, flush) instead of one round trip per record, with nothing
+    lost and per-partition order intact."""
+    from repro.data import IngestConfig, IngestRunner, SyntheticRateSource
+
+    broker = Broker()
+    server = serve_broker(broker, str(tmp_path / "b.sock"))
+    client = RemoteBroker(server.address)
+    try:
+        runner = IngestRunner(client)
+        m = runner.add(SyntheticRateSource(rate=1e9, total=500),
+                       IngestConfig(topic="t", partitions=2, poll_batch=100,
+                                    flush_records=100, max_pending=1 << 30))
+        runner.run_inline(timeout=60)
+        assert runner.done
+        assert m.produced == 500
+        assert sum(broker.end_offsets("t")) == 500
+        # 5 polls x 100 records -> 5 flushes x 2 partition groups
+        assert m.produce_calls <= 10
+        for p in range(2):                 # round-robin kept per-part order
+            vals = [r.value for r in broker.read(OffsetRange("t", p, 0, 999))]
+            assert vals == list(range(p, 500, 2))
+    finally:
+        client.close()
+        server.stop()
+
+
+def test_ingest_flush_deadline_and_done():
+    """A partially-filled buffer flushes when the oldest record ages past
+    flush_interval, and done stays False until the buffer drains."""
+    from repro.data import IngestConfig, IngestRunner
+
+    class Trickle:
+        def __init__(self):
+            self.sent = False
+            self.exhausted = False
+
+        def poll(self, max_records):
+            if not self.sent:
+                self.sent = True
+                return [(b"k", "only-record")]
+            return []
+
+    broker = Broker()
+    runner = IngestRunner(broker)
+    source = Trickle()
+    m = runner.add(source, IngestConfig(topic="t", flush_records=1000,
+                                        flush_interval=0.05))
+    runner.pump()
+    assert broker.end_offsets("t") == [0]  # buffered, not yet produced
+    assert m.produced == 0 and not runner.done
+    time.sleep(0.06)
+    runner.pump()                          # deadline flush
+    assert broker.end_offsets("t") == [1]
+    assert m.produced == 1
+    source.exhausted = True
+    assert runner.done
 
 
 def test_ingest_add_tolerates_create_race():

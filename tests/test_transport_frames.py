@@ -1,0 +1,263 @@
+"""Property-based framing suite for the transport's two message kinds.
+
+The contract under test is connection-drop-only: a frame either decodes to
+*exactly* what was sent, or the receiving side raises ``FrameError`` (clean
+EOF at a frame boundary is ``None``). Truncation at any byte, any single-bit
+flip, or arbitrary garbage must never crash the process and must never
+surface a different ("garbage") record. Both kinds are exercised: ``P``
+(restricted pickle) and ``A`` (array frames: pickled skeleton + raw
+out-of-band ndarray buffers).
+"""
+import socket
+import struct
+import zlib
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # container has no hypothesis; smoke path below
+    HAVE_HYPOTHESIS = False
+
+from repro.data.transport import (KIND_ARRAY, KIND_PICKLE, MAGIC, FrameError,
+                                  decode_message, encode_message,
+                                  recv_frame, recv_message, send_frame,
+                                  send_message)
+
+_HEADER = struct.Struct(">2sII")       # mirror of the wire header
+
+
+# -- plumbing ----------------------------------------------------------------
+
+def _pair():
+    a, b = socket.socketpair()
+    a.settimeout(10)
+    b.settimeout(10)
+    return a, b
+
+
+def _eq(a, b) -> bool:
+    """Structural equality that is array-aware (== on ndarrays is elementwise)."""
+    if isinstance(a, np.ndarray) or isinstance(b, np.ndarray):
+        if not (isinstance(a, np.ndarray) and isinstance(b, np.ndarray)):
+            return False
+        if a.dtype != b.dtype or a.shape != b.shape:
+            return False
+        equal_nan = np.issubdtype(a.dtype, np.inexact)
+        return np.array_equal(a, b, equal_nan=equal_nan)
+    if isinstance(a, (tuple, list)) and isinstance(b, (tuple, list)):
+        return (type(a) is type(b) and len(a) == len(b)
+                and all(_eq(x, y) for x, y in zip(a, b)))
+    if isinstance(a, dict) and isinstance(b, dict):
+        return (a.keys() == b.keys()
+                and all(_eq(a[k], b[k]) for k in a))
+    return type(a) is type(b) and a == b
+
+
+def _roundtrip(obj):
+    a, b = _pair()
+    try:
+        send_message(a, obj)
+        return recv_message(b)
+    finally:
+        a.close()
+        b.close()
+
+
+def _frame_bytes(obj) -> bytes:
+    """The exact byte string one message frame occupies on the wire."""
+    parts = encode_message(obj)
+    payload = b"".join(bytes(p) for p in parts)
+    return _HEADER.pack(MAGIC, len(payload), zlib.crc32(payload)) + payload
+
+
+def _outcome(wire_bytes: bytes, original) -> str:
+    """Feed (possibly corrupt) bytes to a receiver; classify the result.
+    Anything other than {the exact original, clean EOF, FrameError} fails."""
+    a, b = _pair()
+    a.sendall(wire_bytes)
+    a.close()
+    try:
+        try:
+            got = recv_message(b)
+        except FrameError:
+            return "rejected"
+    finally:
+        b.close()
+    if got is None:
+        return "eof"
+    assert _eq(got, original), f"garbage surfaced: {got!r} != {original!r}"
+    return "intact"
+
+
+# -- round trips (deterministic matrix; hypothesis widens it below) ----------
+
+_DTYPES = [np.bool_, np.uint8, np.int16, np.int32, np.int64,
+           np.float16, np.float32, np.float64, np.complex64, np.complex128]
+_SHAPES = [(), (0,), (1,), (7,), (3, 4), (2, 3, 4)]
+
+
+def _make_array(dtype, shape, seed=0):
+    rng = np.random.default_rng(seed)
+    n = int(np.prod(shape))            # () -> 1, any 0-dim -> 0
+    raw = rng.integers(0, 100, size=n)
+    return raw.astype(dtype).reshape(shape)
+
+
+def test_array_roundtrip_dtype_shape_matrix_smoke():
+    """Deterministic replicas of the hypothesis property (runs everywhere)."""
+    for dtype in _DTYPES:
+        for shape in _SHAPES:
+            arr = _make_array(dtype, shape)
+            got = _roundtrip(arr)
+            assert _eq(got, arr), (dtype, shape)
+    # orders and views: F-contiguous stays F; non-contiguous falls back
+    # in-band but still round-trips exactly
+    c = _make_array(np.float32, (6, 5), seed=1)
+    f = np.asfortranarray(c)
+    strided = c[::2, 1::2]
+    for arr in (f, strided):
+        got = _roundtrip(arr)
+        assert _eq(got, arr)
+    assert _roundtrip(f).flags["F_CONTIGUOUS"]
+
+
+def test_decoded_arrays_are_writable():
+    """Zero-copy decode must not hand out read-only views — consumers
+    (solvers) mutate frames in place."""
+    arr = _make_array(np.float32, (16, 16))
+    got = _roundtrip(("k", arr))[1]
+    assert got.flags.writeable
+    got += 1.0                             # must not raise
+    assert _eq(got, arr + 1.0)
+
+
+def test_mixed_payload_roundtrip_smoke():
+    objs = [
+        b"", b"x" * 70_000, "text", 0, -1, 2.5, None, True,
+        {"i": 1, "nested": (1, [2, 3], {"b": b"bytes"})},
+        ("produce_many", ("t", [(b"k0", _make_array(np.float32, (3, 4))),
+                                (None, (7, _make_array(np.int64, (5,))))]),
+         {"partition": 1, "timestamp": 2.0}),
+    ]
+    for obj in objs:
+        assert _eq(_roundtrip(obj), obj)
+
+
+def test_kind_selection():
+    only_pickle = encode_message({"i": 1, "b": b"raw"})
+    assert len(only_pickle) == 1 and only_pickle[0][:1] == KIND_PICKLE
+    with_array = encode_message((b"k", _make_array(np.float32, (4, 4))))
+    assert len(with_array) > 1 and bytes(with_array[0][:1]) == KIND_ARRAY
+
+
+def test_raw_frame_layer_roundtrip_bytes():
+    import os
+    a, b = _pair()
+    try:
+        for payload in (b"", b"z", os.urandom(10_000)):
+            send_frame(a, payload)
+            assert recv_frame(b) == payload
+    finally:
+        a.close()
+        b.close()
+
+
+# -- corruption: truncation --------------------------------------------------
+
+_TRUNC_MSG = (b"key-7", _make_array(np.int32, (4, 4)), "meta")
+
+
+def _check_truncation(cut: int) -> None:
+    frame = _frame_bytes(_TRUNC_MSG)
+    outcome = _outcome(frame[:cut], _TRUNC_MSG)
+    if cut == 0:
+        assert outcome == "eof"
+    elif cut < len(frame):
+        assert outcome == "rejected", f"cut={cut} not rejected"
+    else:
+        assert outcome == "intact"
+
+
+def test_every_truncation_point_rejected_smoke():
+    """Exhaustive: cut the frame at *every* byte boundary. Only the empty
+    stream (clean EOF) and the full frame are not errors."""
+    frame = _frame_bytes(_TRUNC_MSG)
+    for cut in range(len(frame) + 1):
+        _check_truncation(cut)
+
+
+# -- corruption: bit flips ---------------------------------------------------
+
+def _check_bit_flip(byte_idx: int, bit: int) -> None:
+    frame = bytearray(_frame_bytes(_TRUNC_MSG))
+    frame[byte_idx % len(frame)] ^= 1 << bit
+    # CRC-32 detects every single-bit error; header-field flips hit the
+    # magic/length/CRC checks first. Nothing may come out but a rejection.
+    assert _outcome(bytes(frame), _TRUNC_MSG) == "rejected"
+
+
+def test_bit_flips_rejected_smoke():
+    """Deterministic replicas of the hypothesis property (runs everywhere):
+    flips across the header, the kind byte, the skeleton and the raw array
+    region."""
+    frame_len = len(_frame_bytes(_TRUNC_MSG))
+    rng = np.random.default_rng(11)
+    positions = list(range(12))                    # full header + kind byte
+    positions += [int(i) for i in rng.integers(12, frame_len, 60)]
+    for byte_idx in positions:
+        for bit in (0, 3, 7):
+            _check_bit_flip(byte_idx, bit)
+
+
+# -- corruption: garbage payloads against decode_message ---------------------
+
+def test_garbage_payloads_raise_frame_error_smoke():
+    rng = np.random.default_rng(7)
+    blobs = [bytes(rng.integers(0, 256, n, dtype=np.uint8).tolist())
+             for n in (1, 2, 9, 64, 400)]
+    cases = [b""] + blobs
+    cases += [KIND_PICKLE + b for b in blobs]      # well-framed, bad pickle
+    cases += [KIND_ARRAY + b for b in blobs]       # bad region headers
+    # region lengths that do not add up
+    cases += [KIND_ARRAY + struct.pack(">II", 10, 2)
+              + struct.pack(">2Q", 4, 1 << 50) + b"x" * 30]
+    for payload in cases:
+        with pytest.raises(FrameError):
+            decode_message(payload)
+
+
+# -- hypothesis widening -----------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    _dtype_strategy = st.sampled_from(_DTYPES)
+    _shape_strategy = st.lists(st.integers(0, 5), min_size=0, max_size=3) \
+        .map(tuple)
+
+    @given(payload=st.binary(max_size=5000))
+    @settings(max_examples=50, deadline=None)
+    def test_property_pickle_kind_roundtrip(payload):
+        assert _eq(_roundtrip((payload, len(payload))), (payload, len(payload)))
+
+    @given(dtype=_dtype_strategy, shape=_shape_strategy,
+           seed=st.integers(0, 2 ** 16), fortran=st.booleans())
+    @settings(max_examples=60, deadline=None)
+    def test_property_array_kind_roundtrip(dtype, shape, seed, fortran):
+        arr = _make_array(dtype, shape, seed=seed)
+        if fortran and arr.ndim > 1:
+            arr = np.asfortranarray(arr)
+        got = _roundtrip((b"k", arr))[1]
+        assert _eq(got, arr)
+
+    @given(cut=st.integers(0, len(_frame_bytes(_TRUNC_MSG))))
+    @settings(max_examples=60, deadline=None)
+    def test_property_truncation_never_garbage(cut):
+        _check_truncation(cut)
+
+    @given(byte_idx=st.integers(0, len(_frame_bytes(_TRUNC_MSG)) - 1),
+           bit=st.integers(0, 7))
+    @settings(max_examples=80, deadline=None)
+    def test_property_bit_flip_never_garbage(byte_idx, bit):
+        _check_bit_flip(byte_idx, bit)
