@@ -5,7 +5,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-data test-transport bench bench-check examples deps-check
+.PHONY: test test-data test-delivery test-transport bench bench-check examples deps-check
 
 test:           ## tier-1: full suite, stop at first failure
 	$(PYTHON) -m pytest -x -q
@@ -15,6 +15,9 @@ test-data:      ## just the data subsystem (sources/sinks/windows/broker/durabil
 	    tests/test_data_window.py tests/test_broker_dstream.py \
 	    tests/test_broker_parity.py tests/test_durable_log.py
 
+test-delivery:  ## parallel sink delivery chaos suite + lag-driven elastic ingest
+	$(PYTHON) -m pytest -q tests/test_delivery.py tests/test_elastic_ingest.py
+
 test-transport: ## socket broker transport (framing properties, reconnect, cross-process)
 	$(PYTHON) -m pytest -q tests/test_transport.py tests/test_transport_frames.py \
 	    tests/test_broker_parity.py
@@ -22,7 +25,7 @@ test-transport: ## socket broker transport (framing properties, reconnect, cross
 bench:          ## CSV benchmark sweep (includes bench_ingest)
 	$(PYTHON) -m benchmarks.run
 
-bench-check:    ## regression guard: batched produce_many >= 3x per-record produce
+bench-check:    ## regression guards: produce_many >= 3x per-record, parallel fan-out >= 2x serial
 	$(PYTHON) -m benchmarks.run --check
 
 examples:       ## fast end-to-end example runs

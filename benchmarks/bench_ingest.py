@@ -3,7 +3,7 @@ fast path, and backpressure behavior under overload (the near-real-time
 criterion stressed past its breaking point instead of only at the happy
 path).
 
-Six measurements:
+Eight measurements:
   1. ingest/source_to_batch — raw records/s through SyntheticRateSource ->
      IngestRunner -> broker -> StreamingContext micro-batches (in-process).
   2. ingest/remote_transport — the same end-to-end path with every produce,
@@ -18,9 +18,19 @@ Six measurements:
      frames as values; array payloads cross the socket as raw-buffer array
      frames (no pickle of the bytes). The derived column compares the same
      workload with array frames disabled (every frame pickled).
-  5. ingest/backpressure_drop — a rate-limited (slow) pipeline fed ~10x over
+  5. ingest/fanout_parallel — the output stage under a slow sink: N sinks,
+     one of them 100x slower than the rest. Serial `fan_out` pays the slow
+     sink inside the batch loop; the delivery runtime gives each sink its
+     own lane, so the metrics path (time for every FAST sink to see every
+     batch) collapses to the enqueue cost. The regression guard asserts the
+     parallel metrics path beats serial fan_out by >= 2x wall-clock.
+  6. ingest/elastic_scale — the elasticity loop under the same overload: a
+     LagPolicy watches the runner's lag and drives a worker controller;
+     reports time-to-first-scale-up and the up/down event counts (hysteresis
+     means a handful of decisive events, not flapping).
+  7. ingest/backpressure_drop — a rate-limited (slow) pipeline fed ~10x over
      capacity with the drop policy: lag stays bounded, overload is shed.
-  6. ingest/backpressure_sample — same overload with the sample policy: the
+  8. ingest/backpressure_sample — same overload with the sample policy: the
      stream thins (every k-th record survives) but stays ordered and bounded.
 """
 from __future__ import annotations
@@ -167,6 +177,135 @@ def _zero_copy_throughput(records: int, batch: int, edge: int = 64) -> float:
     return records / sec
 
 
+def _fanout_batches(n_sinks: int, batches: int, slow_s: float):
+    """Build the fan-out workload: n_sinks keyed sinks, the last one slow."""
+    import time as _time
+
+    class _Sink:
+        def __init__(self, sleep: float = 0.0) -> None:
+            self.sleep = sleep
+            self.batches = 0
+
+        def write_batch(self, items) -> int:
+            if self.sleep:
+                _time.sleep(self.sleep)
+            self.batches += 1
+            return len(items)
+
+        def close(self) -> None:
+            pass
+
+    sinks = [_Sink() for _ in range(n_sinks - 1)] + [_Sink(sleep=slow_s)]
+    items = [[(f"b{i:04d}-k{j}", j) for j in range(4)] for i in range(batches)]
+    return sinks, items
+
+
+def _fanout_serial(batches: int, n_sinks: int, slow_s: float) -> float:
+    """Serial fan_out: the batch thread pays every sink, slow one included.
+    Returns seconds until every FAST sink has seen every batch (= the whole
+    loop: serially there is no way to finish the fast sinks early)."""
+    from repro.data import fan_out
+
+    sinks, items = _fanout_batches(n_sinks, batches, slow_s)
+    write = fan_out(sinks)
+    t0 = time.perf_counter()
+    for batch in items:
+        write(batch)
+    return time.perf_counter() - t0
+
+
+def _fanout_parallel(batches: int, n_sinks: int, slow_s: float) -> float:
+    """Delivery runtime: per-sink lanes. Returns seconds until every FAST
+    sink delivered every batch — the metrics-path latency; the slow lane
+    keeps draining in the background and is settled by close()."""
+    from repro.data import DeliveryRuntime, SinkPolicy
+
+    sinks, items = _fanout_batches(n_sinks, batches, slow_s)
+    runtime = DeliveryRuntime()
+    lanes = [runtime.add_sink(s, SinkPolicy.skip_batch(queue_depth=batches),
+                              name=f"sink-{i}") for i, s in enumerate(sinks)]
+    fast = lanes[:-1]
+
+    class _Info:
+        def __init__(self, i: int, result) -> None:
+            self.index, self.result = i, result
+
+    t0 = time.perf_counter()
+    for i, batch in enumerate(items):
+        runtime.submit(_Info(i, batch))
+    while any(lane.metrics.delivered < batches for lane in fast):
+        time.sleep(0.0002)
+    sec = time.perf_counter() - t0
+    runtime.close(drain=True)
+    assert all(s.batches == batches for s in sinks)   # nothing lost
+    return sec
+
+
+def _fanout_throughput(batches: int = 40, n_sinks: int = 4,
+                       slow_s: float = 0.005) -> float:
+    """Measurement 5: serial fan_out vs per-sink delivery lanes. Returns the
+    serial/parallel wall-clock ratio on the metrics path."""
+    serial = min(_fanout_serial(batches, n_sinks, slow_s) for _ in range(3))
+    parallel = min(_fanout_parallel(batches, n_sinks, slow_s)
+                   for _ in range(3))
+    emit("ingest/fanout_parallel", parallel / batches,
+         f"{batches} batches x {n_sinks} sinks (one sleeping {slow_s}s): "
+         f"fast sinks complete in {parallel:.4f}s parallel vs "
+         f"{serial:.3f}s serial fan_out; speedup {serial / parallel:.1f}x")
+    return serial / parallel
+
+
+def _elastic_scale(records: int = 2000, capacity_rec_s: float = 4000.0
+                   ) -> None:
+    """Measurement 6: overloaded pipeline with the elasticity loop closed —
+    LagPolicy reads the runner's lag each batch and scales a (stub) worker
+    controller; hysteresis should produce a few decisive events."""
+    from repro.core import Broker, Context, LagPolicy, StreamingContext
+    from repro.data import IngestConfig, IngestRunner, SyntheticRateSource
+
+    class _Controller:
+        def __init__(self) -> None:
+            self.world, self.max_workers, self.calls = 1, 8, []
+
+        def add_workers(self, n: int) -> None:
+            self.world += n
+            self.calls.append("add")
+
+        def fail_workers(self, n: int) -> None:
+            self.world -= n
+            self.calls.append("fail")
+
+    broker = Broker()
+    per_batch = 32
+    sc = StreamingContext(Context(), broker,
+                          max_records_per_partition=per_batch)
+    runner = IngestRunner(broker, consumer=sc)
+    src = SyntheticRateSource(rate=1e9, total=records)
+    runner.add(src, IngestConfig(topic="t", policy="block", max_pending=512,
+                                 poll_batch=64))
+    sc.subscribe(["t"])
+    sc.foreach_batch(lambda rdd, info: time.sleep(per_batch / capacity_rec_s))
+    ctl = _Controller()
+    policy = LagPolicy(256, 32, sustain=2, cooldown=0.05)
+    t0 = time.perf_counter()
+    first_up = None
+    runner.start()
+    while not runner.done or sc.lag("t") > 0:
+        if sc.run_one_batch() is None:
+            time.sleep(0.0005)
+        policy.drive(ctl, runner)
+        if first_up is None and ctl.calls:
+            first_up = time.perf_counter() - t0
+    runner.stop()
+    sec = time.perf_counter() - t0
+    peak = max((o.lag for o in policy.history), default=0)
+    emit("ingest/elastic_scale", sec,
+         f"{records} records ~10x overloaded: peak lag {peak}, first "
+         f"scale-up after {(first_up or sec) * 1e3:.0f}ms, "
+         f"{ctl.calls.count('add')} up / {ctl.calls.count('fail')} down "
+         f"events, final world {ctl.world}/8")
+
+
 def _backpressure(policy: str, records: int = 2000,
                   capacity_rec_s: float = 4000.0) -> None:
     """Overloaded pipeline: source produces ~10x what the consumer sustains.
@@ -211,16 +350,20 @@ def run(records: int = 20000, batch: int = 200) -> dict[str, float]:
         "ingest/remote_transport": _remote_throughput(records // 4, batch),
         "ingest/produce_many": _produce_many_throughput(records, batch),
         "ingest/zero_copy": _zero_copy_throughput(2000, batch),
+        "ingest/fanout_parallel": _fanout_throughput(),
     }
+    _elastic_scale()
     _backpressure("drop")
     _backpressure("sample")
     return rates
 
 
-def check(records: int = 8000, batch: int = 200, min_ratio: float = 3.0
-          ) -> bool:
-    """Fast-path regression guard (`benchmarks/run.py --check`): batched
-    produce_many must beat per-record produce on records/s by min_ratio."""
+def check(records: int = 8000, batch: int = 200, min_ratio: float = 3.0,
+          min_fanout_ratio: float = 2.0) -> bool:
+    """Regression guards (`benchmarks/run.py --check`): batched produce_many
+    must beat per-record produce on records/s by min_ratio, and the parallel
+    delivery runtime must beat serial fan_out on metrics-path wall-clock by
+    min_fanout_ratio with one slow sink in the fan."""
     per_record = _remote_throughput(records // 4, batch)
     batched = _produce_many_throughput(records, batch)
     ratio = batched / per_record
@@ -228,7 +371,12 @@ def check(records: int = 8000, batch: int = 200, min_ratio: float = 3.0
     print(f"# produce_many {batched:.0f} rec/s vs per-record "
           f"{per_record:.0f} rec/s = {ratio:.2f}x "
           f"(required >= {min_ratio}x): {'OK' if ok else 'REGRESSION'}")
-    return ok
+    fan_ratio = _fanout_throughput()
+    fan_ok = fan_ratio >= min_fanout_ratio
+    print(f"# fanout_parallel metrics path {fan_ratio:.1f}x serial fan_out "
+          f"with one slow sink (required >= {min_fanout_ratio}x): "
+          f"{'OK' if fan_ok else 'REGRESSION'}")
+    return ok and fan_ok
 
 
 if __name__ == "__main__":

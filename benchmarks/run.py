@@ -9,9 +9,11 @@
 Prints ``name,us_per_call,derived`` CSV. Roofline numbers for the LM cells
 come from the dry-run artifacts (launch/roofline.py), not from here.
 
-``--check`` runs only the transport fast-path regression guard: batched
-``ingest/produce_many`` must beat per-record ``ingest/remote_transport`` on
-records/s (exit 1 on regression; ``make bench-check`` wires it into CI).
+``--check`` runs only the regression guards: batched ``ingest/produce_many``
+must beat per-record ``ingest/remote_transport`` on records/s, and the
+parallel delivery runtime (``ingest/fanout_parallel``) must beat serial
+``fan_out`` by >= 2x wall-clock on the metrics path with one slow sink in
+the fan (exit 1 on regression; ``make bench-check`` wires it into CI).
 """
 from __future__ import annotations
 
@@ -23,17 +25,23 @@ import traceback
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--check", action="store_true",
-                    help="fast-path regression guard only: assert batched "
-                         "produce beats per-record produce, exit 1 if not")
+                    help="regression guards only: batched produce beats "
+                         "per-record produce, parallel fan-out beats serial "
+                         "fan_out; exit 1 if not")
     ap.add_argument("--check-ratio", type=float, default=3.0,
                     help="minimum produce_many / remote_transport records/s "
                          "ratio for --check (default 3.0)")
+    ap.add_argument("--check-fanout-ratio", type=float, default=2.0,
+                    help="minimum serial/parallel fan-out wall-clock ratio "
+                         "with one slow sink for --check (default 2.0)")
     args = ap.parse_args(argv)
 
     print("name,us_per_call,derived")
     if args.check:
         from benchmarks import bench_ingest
-        return 0 if bench_ingest.check(min_ratio=args.check_ratio) else 1
+        return 0 if bench_ingest.check(
+            min_ratio=args.check_ratio,
+            min_fanout_ratio=args.check_fanout_ratio) else 1
 
     from benchmarks import (bench_allreduce, bench_ingest, bench_ptycho,
                             bench_streaming, bench_tomo)

@@ -4,7 +4,8 @@ from repro.core.bridge import MPIBridge, make_worker_mesh, rank_of
 from repro.core.broker import (Broker, InMemoryPartitionLog, OffsetRange,
                                PartitionLog, Record, create_rdd)
 from repro.core.dstream import BatchInfo, StreamingContext, StreamProgress
-from repro.core.fault import ElasticController, Watchdog, run_with_recovery
+from repro.core.fault import (ElasticController, LagPolicy, Watchdog,
+                              run_with_recovery)
 from repro.core.pipeline import (NearRealTimePipeline, PipelineConfig,
                                  PipelineReport)
 from repro.core.pmi import KeyValueSpace, PMIClient, PMIServer
@@ -16,7 +17,7 @@ __all__ = [
     "Broker", "PartitionLog", "InMemoryPartitionLog", "OffsetRange",
     "Record", "create_rdd",
     "BatchInfo", "StreamingContext", "StreamProgress",
-    "ElasticController", "Watchdog", "run_with_recovery",
+    "ElasticController", "LagPolicy", "Watchdog", "run_with_recovery",
     "NearRealTimePipeline", "PipelineConfig", "PipelineReport",
     "KeyValueSpace", "PMIClient", "PMIServer",
     "RDD", "Context", "FailureInjector", "PartitionLostError", "TaskScheduler",

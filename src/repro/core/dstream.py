@@ -74,12 +74,18 @@ class StreamingContext:
     def __init__(self, context: Context, broker: Broker,
                  batch_interval: float = 0.1,
                  max_records_per_partition: int | None = None,
-                 checkpoint_path: str | None = None) -> None:
+                 checkpoint_path: str | None = None,
+                 clock: Callable[[], float] | None = None) -> None:
         self.context = context
         self.broker = broker
         self.batch_interval = batch_interval
         self.max_records_per_partition = max_records_per_partition
         self.checkpoint_path = checkpoint_path
+        # stream clock: stamps BatchInfo.scheduled_at and pumped-record
+        # timestamps. Injectable so time-based windows are deterministic in
+        # tests; scheduling waits always use real time.
+        self._clock = clock or time.monotonic
+        self._delivery = None          # lazy DeliveryRuntime (parallel sinks)
         self._topics: list[str] = []
         self._decoder: Callable[[Any], Any] | None = None
         self._batch_fn: Callable[[RDD, BatchInfo], Any] | None = None
@@ -136,8 +142,26 @@ class StreamingContext:
     def foreach_batch(self, fn: Callable[[RDD, BatchInfo], Any]) -> None:
         self._batch_fn = fn
 
-    def add_sink(self, fn: Callable[[BatchInfo], None]) -> None:
-        self._sinks.append(fn)
+    def add_sink(self, fn: Callable[[BatchInfo], None],
+                 policy: Any = None, name: str | None = None) -> None:
+        """Register a batch sink. Without a ``policy`` the sink runs serially
+        in the batch thread (the degenerate single-thread path). With a
+        :class:`~repro.data.delivery.SinkPolicy`, the sink gets its own
+        delivery lane — worker thread + bounded queue + failure isolation —
+        on this context's :class:`~repro.data.delivery.DeliveryRuntime`."""
+        if policy is None:
+            self._sinks.append(fn)
+        else:
+            self.delivery.add_batch_sink(fn, policy, name=name)
+
+    @property
+    def delivery(self):
+        """The context's sink-delivery runtime (created on first use); its
+        dead-letter topics live on this context's broker."""
+        if self._delivery is None:
+            from repro.data.delivery import DeliveryRuntime
+            self._delivery = DeliveryRuntime(broker=self.broker)
+        return self._delivery
 
     # -- consumer-side accounting ------------------------------------------
     def committed(self, topic: str) -> int:
@@ -179,7 +203,7 @@ class StreamingContext:
             for key, value in source.poll(n):
                 self.broker.produce(topic, value, key=key,
                                     partition=rr[topic] % parts,
-                                    timestamp=time.monotonic())
+                                    timestamp=self._clock())
                 rr[topic] += 1
 
     def run_one_batch(self) -> BatchInfo | None:
@@ -191,7 +215,7 @@ class StreamingContext:
             return None
         info = BatchInfo(index=self._batch_index, ranges=ranges,
                          num_records=sum(r.count() for r in ranges),
-                         scheduled_at=time.monotonic())
+                         scheduled_at=self._clock())
         per_topic: dict[str, list[OffsetRange]] = {}
         for r in ranges:
             per_topic.setdefault(r.topic, []).append(r)
@@ -217,6 +241,11 @@ class StreamingContext:
         self._history.append(info)
         for sink in self._sinks:
             sink(info)
+        if self._delivery is not None:
+            # parallel lanes: enqueue only; check() surfaces a fail_pipeline
+            # lane's verdict (possibly from an earlier batch) and aborts here
+            self._delivery.submit(info)
+            self._delivery.check()
         return info
 
     def run_batches(self, max_batches: int, wait_for_data: float = 0.0) -> list[BatchInfo]:
@@ -252,6 +281,16 @@ class StreamingContext:
         if self._thread is not None:
             self._thread.join(timeout=10)
             self._thread = None
+
+    def close(self, drain: bool = True) -> None:
+        """Stop the scheduler and shut down the delivery lanes. With
+        ``drain=True`` (default) every queued batch is written before the
+        lanes exit — the no-lost-batches contract; ``drain=False`` discards
+        queued work (fast teardown). Raises a pending
+        :class:`~repro.data.delivery.DeliveryFailed`."""
+        self.stop()
+        if self._delivery is not None:
+            self._delivery.close(drain=drain)
 
     # -- near-real-time accounting ------------------------------------------
     def realtime_report(self) -> dict[str, float]:

@@ -14,6 +14,11 @@ that a 1000-node deployment must solve:
   programs at scale (you cannot lineage-recompute half an allreduce).
 * :func:`run_with_recovery` — drives a step function, catching injected
   worker failures between steps, re-meshing and restoring.
+* :class:`LagPolicy` — closes the elasticity loop with the *data* plane:
+  sustained ingest lag (or shed load under the drop/sample backpressure
+  policies) scales the worker set up instead of shedding data, and a drained
+  pipeline scales it back down — Kafka consumer-group rebalancing driven by
+  consumer lag, with hysteresis so the controller never flaps.
 
 In-process, "workers" are virtual devices; on a real pod the same control
 flow fronts ``jax.distributed`` re-initialization. The contract tested in
@@ -89,14 +94,22 @@ class ElasticController:
     with a new mesh/sharding) is identical.
     """
 
-    def __init__(self, num_workers: int | None = None) -> None:
+    def __init__(self, num_workers: int | None = None,
+                 initial_workers: int | None = None) -> None:
         devices = jax.devices()
         self.max_workers = num_workers or len(devices)
         if self.max_workers > len(devices):
             raise ValueError(
                 f"{self.max_workers} workers requested, {len(devices)} devices")
+        if initial_workers is not None and not (
+                1 <= initial_workers <= self.max_workers):
+            raise ValueError(
+                f"initial_workers {initial_workers} outside "
+                f"[1, {self.max_workers}]")
         self.pmi = PMIServer(world_size=self.max_workers)
-        self.alive = list(range(self.max_workers))
+        # start shrunk when asked: the elastic-scale-out demo begins on a
+        # minimal worker set and lets LagPolicy grow it under load
+        self.alive = list(range(initial_workers or self.max_workers))
         self.events: list[ElasticEvent] = []
         self._bridge: MPIBridge | None = None
 
@@ -129,6 +142,138 @@ class ElasticController:
         self.events.append(ElasticEvent(len(self.events) + 1, self.world,
                                         f"grew to {new} workers", step))
         log.info("elastic: grew to %d workers", self.world)
+
+
+@dataclass
+class LagObservation:
+    """One policy tick: what was seen and what was decided."""
+    now: float
+    lag: int
+    shed: int          # records dropped/sampled-out since the previous tick
+    delta: int         # worker delta: requested by observe(), applied by drive()
+
+
+class LagPolicy:
+    """Hysteresis controller from ingest lag to worker-set size.
+
+    Consumes the backpressure signals :class:`~repro.data.ingest
+    .IngestRunner` exposes (current per-topic lag via ``lag_snapshot()``,
+    cumulative drop/sample counts via ``metrics``) and drives
+    :meth:`ElasticController.add_workers` / :meth:`ElasticController
+    .fail_workers`:
+
+    * scale **up** by ``step`` after ``sustain`` consecutive observations
+      with ``lag >= scale_up_lag`` *or* shed records (under the drop/sample
+      policies overload shows up as shedding, not lag — both mean the
+      consumer is too small);
+    * scale **down** by ``step`` after ``sustain`` consecutive observations
+      with ``lag <= scale_down_lag`` and nothing shed (the pipeline
+      drained);
+    * inside the band ``(scale_down_lag, scale_up_lag)`` the streak counters
+      reset — a noisy signal bouncing around a watermark never flaps;
+    * after any scale event, observations inside ``cooldown`` seconds are
+      ignored entirely, so the re-formed mesh gets to prove itself before
+      the next decision.
+
+    The clock is injectable (``clock=``) and every ``observe``/``drive``
+    accepts an explicit ``now=`` — decisions are a pure function of the fed
+    signal, which is what makes the scripted tests deterministic.
+    """
+
+    def __init__(self, scale_up_lag: int, scale_down_lag: int, *,
+                 sustain: int = 3, cooldown: float = 10.0, step: int = 1,
+                 clock: Callable[[], float] = time.monotonic) -> None:
+        if scale_down_lag >= scale_up_lag:
+            raise ValueError(
+                f"scale_down_lag {scale_down_lag} must be < scale_up_lag "
+                f"{scale_up_lag} (the hysteresis band)")
+        if sustain < 1 or step < 1:
+            raise ValueError("sustain and step must be >= 1")
+        self.scale_up_lag = scale_up_lag
+        self.scale_down_lag = scale_down_lag
+        self.sustain = sustain
+        self.cooldown = cooldown
+        self.step = step
+        self._clock = clock
+        self._above = 0                  # consecutive overloaded ticks
+        self._below = 0                  # consecutive drained ticks
+        self._last_event_at: float | None = None
+        self._shed_seen = 0              # cumulative shed already accounted
+        self.history: list[LagObservation] = []
+
+    # -- pure decision ------------------------------------------------------
+    def _decide(self, lag: int, shed: int, now: float) -> int:
+        """Update streaks and return the delta the signal calls for — the
+        event (streak reset + cooldown start) is committed separately, so a
+        decision the controller cannot apply (already at max/min) does not
+        burn a cooldown it never earned."""
+        in_cooldown = (self._last_event_at is not None
+                       and now - self._last_event_at < self.cooldown)
+        if in_cooldown:
+            return 0
+        if lag >= self.scale_up_lag or shed > 0:
+            self._above += 1
+            self._below = 0
+            if self._above >= self.sustain:
+                return self.step
+        elif lag <= self.scale_down_lag:
+            self._below += 1
+            self._above = 0
+            if self._below >= self.sustain:
+                return -self.step
+        else:                            # inside the band: streaks reset
+            self._above = self._below = 0
+        return 0
+
+    def _commit(self, now: float) -> None:
+        self._above = self._below = 0
+        self._last_event_at = now
+
+    def observe(self, lag: int, shed: int = 0, now: float | None = None) -> int:
+        """Feed one observation; returns the requested worker delta
+        (``+step``, ``-step`` or ``0``)."""
+        now = self._clock() if now is None else now
+        delta = self._decide(lag, shed, now)
+        if delta:
+            self._commit(now)
+        self.history.append(LagObservation(now, lag, shed, delta))
+        return delta
+
+    # -- wired decision -----------------------------------------------------
+    def drive(self, controller: "ElasticController", runner: Any = None,
+              lag: int | None = None, now: float | None = None) -> int:
+        """One tick against live signals: read ``runner``'s lag + shed
+        deltas (or take ``lag`` directly), decide, and apply the decision to
+        ``controller``. Returns the worker delta actually applied."""
+        shed = 0
+        if runner is not None:
+            if lag is None:
+                lag = max(runner.lag_snapshot().values(), default=0)
+            total_shed = sum(m.dropped + m.sampled_out
+                             for m in runner.metrics)
+            shed = max(0, total_shed - self._shed_seen)
+            self._shed_seen = total_shed
+        if lag is None:
+            raise ValueError("drive() needs a runner or an explicit lag")
+        now = self._clock() if now is None else now
+        delta = self._decide(lag, shed, now)
+        applied = 0
+        if delta > 0:
+            applied = min(delta, controller.max_workers - controller.world)
+            if applied > 0:
+                controller.add_workers(applied)
+        elif delta < 0:
+            # never fail the last worker
+            applied = -min(-delta, controller.world - 1)
+            if applied < 0:
+                controller.fail_workers(-applied)
+        # only an APPLIED change starts the cooldown: a decision clamped to
+        # nothing (controller already at its bound) keeps the streak alive,
+        # so the policy reacts immediately once headroom appears
+        if applied:
+            self._commit(now)
+        self.history.append(LagObservation(now, lag, shed, applied))
+        return applied
 
 
 def run_with_recovery(

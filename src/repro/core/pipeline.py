@@ -96,18 +96,54 @@ class NearRealTimePipeline:
         self.streaming.foreach_batch(self._on_batch)
         self.streaming.add_sink(self._on_sink)
         for sink in sinks:
-            self.add_sink(sink)
+            if isinstance(sink, tuple):      # (sink, SinkPolicy) pair
+                self.add_sink(sink[0], policy=sink[1])
+            else:
+                self.add_sink(sink)
 
     def subscribe_source(self, source: Any, topic: str | None = None) -> str:
         """Feed the pipeline from a :class:`repro.data.sources.Source`."""
         return self.streaming.subscribe_source(
             source, topic=topic, partitions=self.config.source_partitions)
 
-    def add_sink(self, sink: Any) -> None:
+    def add_sink(self, sink: Any, policy: Any = None,
+                 name: str | None = None) -> None:
         """Accept either a plain ``fn(BatchInfo)`` or a keyed
         :class:`repro.data.sinks.Sink` (``write_batch``): keyed sinks get the
         batch result normalized to ``(key, value)`` items, so their per-key
-        idempotence upgrades replay to exactly-once."""
+        idempotence upgrades replay to exactly-once.
+
+        Without a ``policy`` the sink is written serially in the batch
+        thread (the degenerate single-thread fan-out). With a
+        :class:`~repro.data.delivery.SinkPolicy` it moves onto its own
+        delivery lane — worker thread, bounded queue, per-sink failure
+        isolation (retry / skip / dead-letter / fail-pipeline) — so a slow
+        artifact store cannot stall the metrics path. Lane delivery is
+        asynchronous: batches are guaranteed written only after
+        :meth:`close`; a crash before that can lose up to ``queue_depth``
+        queued batches for that sink (offsets were already committed), so
+        the exactly-once upgrade holds for lanes only up to a clean
+        shutdown. Lane counters: :meth:`delivery_report`.
+        """
+        if policy is not None:
+            # mirror the serial path: a sink exposing BOTH surfaces
+            # (MetricsSink) gets an observe lane AND a keyed lane
+            delivery = self.streaming.delivery
+            observes = hasattr(sink, "observe")
+            keyed = hasattr(sink, "write_batch")
+            if observes:
+                delivery.add_batch_sink(
+                    sink.observe, policy,
+                    name=((name or type(sink).__name__)
+                          + ("-observe" if keyed else "")),
+                    # close via one lane only when the sink has two
+                    sink_close=(None if keyed
+                                else getattr(sink, "close", None)))
+            if keyed:
+                delivery.add_sink(sink, policy, name=name)
+            if not observes and not keyed:
+                delivery.add_batch_sink(sink, policy, name=name)
+            return
         if hasattr(sink, "observe"):        # batch-level metrics sink
             self._sinks.append(sink.observe)
         if hasattr(sink, "write_batch"):
@@ -154,3 +190,17 @@ class NearRealTimePipeline:
                 break
             time.sleep(self.config.batch_interval / 10 or 0.001)
         return self.report
+
+    # -- parallel sink delivery ----------------------------------------------
+    def close(self, drain: bool = True) -> None:
+        """Shut down the delivery lanes (see ``StreamingContext.close``).
+        Call after the last ``run*`` when sinks were added with a policy;
+        ``drain=True`` guarantees every processed batch reached every sink."""
+        self.streaming.close(drain=drain)
+
+    def delivery_report(self) -> dict[str, dict[str, Any]]:
+        """Per-sink-lane depth/latency/failure counters ({} when every sink
+        runs serially) — the delivery-side complement of ``MetricsSink``."""
+        if self.streaming._delivery is None:
+            return {}
+        return self.streaming.delivery.report()

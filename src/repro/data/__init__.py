@@ -27,6 +27,12 @@ Class                             Reproduces
 ``sinks.MetricsSink``             latency/throughput aggregation (Fig. 9/10
                                   accounting) feeding ``PipelineReport``
 ``sinks.CallbackSink``            visualization hook (ParaViewWeb stand-in)
+``delivery.DeliveryRuntime``      Kafka Connect-style sink delivery: one
+                                  worker lane (thread + bounded queue) per
+                                  sink, per-sink :class:`~repro.data
+                                  .delivery.SinkPolicy` (retry / skip /
+                                  dead-letter topic / fail-pipeline,
+                                  timeout, queue block-or-drop)
 ``transport.BrokerServer``        Kafka broker process: serves partition logs
                                   over TCP / Unix sockets to other processes
 ``transport.RemoteBroker``        Kafka client / paper's ZeroMQ direction:
@@ -39,6 +45,8 @@ Class                             Reproduces
 All sinks are idempotent by key, upgrading the dstream layer's at-least-once
 replay to exactly-once end-to-end.
 """
+from repro.data.delivery import (DeliveryFailed, DeliveryRuntime, LaneMetrics,
+                                 SinkLane, SinkPolicy, SinkTimeoutError)
 from repro.data.durable_log import (DurableLogFactory, DurablePartitionLog,
                                     LogCorruptionError)
 from repro.data.ingest import (IngestConfig, IngestRunner, SourceMetrics,
@@ -62,6 +70,8 @@ __all__ = [
     "WindowSpec", "WindowInfo", "Windower", "windowed",
     "Sink", "KeyedSink", "NpzDirectorySink", "TopicSink", "MetricsSink",
     "CallbackSink", "describe_result_items", "fan_out",
+    "DeliveryRuntime", "SinkPolicy", "SinkLane", "LaneMetrics",
+    "DeliveryFailed", "SinkTimeoutError",
     "BrokerServer", "RemoteBroker", "serve_broker", "parse_address",
     "TransportError", "FrameError",
     "DurablePartitionLog", "DurableLogFactory", "LogCorruptionError",

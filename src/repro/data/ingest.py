@@ -172,6 +172,13 @@ class IngestRunner:
     def metrics(self) -> list[SourceMetrics]:
         return [e.metrics for e in self._entries]
 
+    def lag_snapshot(self) -> dict[str, int]:
+        """Current produced-but-unconsumed lag per topic — the live signal
+        (``max_observed_lag`` is a high-water mark and never drains) that
+        :class:`~repro.core.fault.LagPolicy` scales the worker set on."""
+        return {e.config.topic: self._lag_of(e.config.topic)
+                for e in self._entries}
+
     @property
     def done(self) -> bool:
         """Every source exhausted AND its records handed to the broker.

@@ -92,6 +92,55 @@ def test_windowed_over_streaming_context():
                     sum(range(15, 20))]
 
 
+def test_time_windowed_over_streaming_context_fake_clock():
+    """Time-based windows through the full StreamingContext, pinned by an
+    injected fake clock: every batch's scheduled_at is scripted, so window
+    boundaries (and which records fall in them) are exact, not timing-y."""
+    clock = {"t": 100.0}
+    broker = Broker()
+    sc = StreamingContext(Context(), broker, max_records_per_partition=3,
+                          clock=lambda: clock["t"])
+    sc.subscribe_source(SyntheticRateSource(rate=1e9, total=12), topic="t",
+                        poll_batch=3)
+    wout, fired = [], []
+    sc.foreach_batch(windowed(
+        WindowSpec(size=1.0, kind="time"),
+        lambda recs, wi: fired.append((wi.start, wi.end, list(recs),
+                                       wi.partial)),
+        windower_out=wout))
+    # 4 batches of 3 records at rel t = 0.0, 0.4, 0.8, 1.2
+    while not (sc.sources_exhausted and sc.lag("t") == 0):
+        assert sc.run_one_batch() is not None
+        clock["t"] += 0.4
+    assert [b.scheduled_at for b in sc.history] == pytest.approx(
+        [100.0, 100.4, 100.8, 101.2])
+    # the batch at rel 1.2 closed window [0, 1): records from rel 0.0/0.4/0.8
+    assert fired == [(0.0, 1.0, list(range(9)), False)]
+    wout[0].flush()
+    assert fired[1][2] == [9, 10, 11] and fired[1][3] is True
+
+
+def test_sliding_time_windowed_over_streaming_context_fake_clock():
+    clock = {"t": 50.0}
+    broker = Broker()
+    sc = StreamingContext(Context(), broker, max_records_per_partition=2,
+                          clock=lambda: clock["t"])
+    sc.subscribe_source(SyntheticRateSource(rate=1e9, total=10), topic="t",
+                        poll_batch=2)
+    windows = []
+    sc.foreach_batch(windowed(
+        WindowSpec(size=2.0, slide=1.0, kind="time"),
+        lambda recs, wi: windows.append((wi.start, list(recs)))))
+    # 5 batches of 2 records at rel t = 0, 1, 2, 3, 4
+    while not (sc.sources_exhausted and sc.lag("t") == 0):
+        sc.run_one_batch()
+        clock["t"] += 1.0
+    # [0,2) closes at rel 2 (records of batches at 0,1); [1,3) at rel 3; ...
+    assert windows == [(0.0, [0, 1, 2, 3]),
+                       (1.0, [2, 3, 4, 5]),
+                       (2.0, [4, 5, 6, 7])]
+
+
 def test_window_spec_validation():
     with pytest.raises(ValueError):
         WindowSpec(size=0)
