@@ -5,7 +5,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-data test-delivery test-transport bench bench-check examples deps-check
+.PHONY: test test-data test-delivery test-state test-transport bench bench-check examples deps-check
 
 test:           ## tier-1: full suite, stop at first failure
 	$(PYTHON) -m pytest -x -q
@@ -13,7 +13,12 @@ test:           ## tier-1: full suite, stop at first failure
 test-data:      ## just the data subsystem (sources/sinks/windows/broker/durability)
 	$(PYTHON) -m pytest -q tests/test_data_sources.py tests/test_data_sinks.py \
 	    tests/test_data_window.py tests/test_broker_dstream.py \
-	    tests/test_broker_parity.py tests/test_durable_log.py
+	    tests/test_broker_parity.py tests/test_durable_log.py \
+	    tests/test_window_state.py
+
+test-state:     ## restart-safe windowed state (stores, atomic checkpoint, SIGKILL crash)
+	$(PYTHON) -m pytest -q tests/test_window_state.py tests/test_data_window.py \
+	    tests/test_broker_dstream.py
 
 test-delivery:  ## parallel sink delivery chaos suite + lag-driven elastic ingest
 	$(PYTHON) -m pytest -q tests/test_delivery.py tests/test_elastic_ingest.py
@@ -25,7 +30,7 @@ test-transport: ## socket broker transport (framing properties, reconnect, cross
 bench:          ## CSV benchmark sweep (includes bench_ingest)
 	$(PYTHON) -m benchmarks.run
 
-bench-check:    ## regression guards: produce_many >= 3x per-record, parallel fan-out >= 2x serial
+bench-check:    ## guards: produce_many >= 3x per-record, fan-out >= 2x serial, durable window state <= 1.3x in-memory
 	$(PYTHON) -m benchmarks.run --check
 
 examples:       ## fast end-to-end example runs

@@ -3,7 +3,7 @@ fast path, and backpressure behavior under overload (the near-real-time
 criterion stressed past its breaking point instead of only at the happy
 path).
 
-Eight measurements:
+Nine measurements:
   1. ingest/source_to_batch — raw records/s through SyntheticRateSource ->
      IngestRunner -> broker -> StreamingContext micro-batches (in-process).
   2. ingest/remote_transport — the same end-to-end path with every produce,
@@ -28,9 +28,14 @@ Eight measurements:
      LagPolicy watches the runner's lag and drives a worker controller;
      reports time-to-first-scale-up and the up/down event counts (hysteresis
      means a handful of decisive events, not flapping).
-  7. ingest/backpressure_drop — a rate-limited (slow) pipeline fed ~10x over
+  7. ingest/window_restore — restart-safe windowed state: per-batch overhead
+     of the DurableStateStore (CRC-framed snapshot+delta log, committed
+     atomically with the offset checkpoint) vs the in-memory store on the
+     same windowed stream (guard: <= 1.3x), and a mid-stream kill+resume vs
+     cold re-ingest of the whole stream.
+  8. ingest/backpressure_drop — a rate-limited (slow) pipeline fed ~10x over
      capacity with the drop policy: lag stays bounded, overload is shed.
-  8. ingest/backpressure_sample — same overload with the sample policy: the
+  9. ingest/backpressure_sample — same overload with the sample policy: the
      stream thins (every k-th record survives) but stays ordered and bounded.
 """
 from __future__ import annotations
@@ -306,6 +311,85 @@ def _elastic_scale(records: int = 2000, capacity_rec_s: float = 4000.0
          f"events, final world {ctl.world}/8")
 
 
+def _window_state_once(batch: int, size: int, store, ckpt_path: str,
+                       broker, max_batches: int | None = None) -> int:
+    """Drain a windowed stream over ``broker`` topic 'w' with the given
+    window state store + checkpoint; returns batches run."""
+    from repro.core import Context, StreamingContext
+    from repro.data import WindowSpec, windowed
+
+    sc = StreamingContext(Context(), broker, max_records_per_partition=batch,
+                          checkpoint_path=ckpt_path)
+    sc.subscribe(["w"])
+    sc.foreach_batch(windowed(WindowSpec(size=size), lambda recs, wi: len(recs),
+                              store=store))
+    n = 0
+    while sc.run_one_batch() is not None:
+        n += 1
+        if max_batches is not None and n >= max_batches:
+            break
+    return n
+
+
+def _window_restore(records: int = 8000, batch: int = 200) -> float:
+    """Measurement 7: restart-safe windowed state. (a) Per-batch overhead of
+    DurableStateStore (snapshot+delta frames, atomic with the offset
+    checkpoint) against InMemoryStateStore on the identical windowed stream
+    — the regression guard asserts <= 1.3x; (b) killing the stream
+    mid-window and resuming from the checkpoint vs cold re-ingest of the
+    whole stream. Returns the overhead ratio."""
+    import shutil
+
+    from repro.core import Broker
+    from repro.data import DurableStateStore, InMemoryStateStore
+
+    def fill() -> "Broker":
+        b = Broker()
+        b.create_topic("w", 1)
+        b.produce_many("w", [(None, i) for i in range(records)], partition=0)
+        return b
+
+    work = tempfile.mkdtemp(prefix="bench-wstate-")
+    size = 2 * batch + batch // 2          # windows straddle batch boundaries
+    batches = records // batch
+
+    def timed(store_factory) -> float:
+        def once() -> None:
+            root = tempfile.mkdtemp(dir=work)
+            store = store_factory(root)
+            _window_state_once(batch, size, store,
+                               os.path.join(root, "ckpt.json"), fill())
+            store.close()
+        return time_call(once, repeats=3)
+
+    t_mem = timed(lambda root: InMemoryStateStore())
+    t_dur = timed(
+        lambda root: DurableStateStore(os.path.join(root, "state")))
+    overhead = t_dur / t_mem
+
+    # restart-and-resume: checkpoint mid-stream, 'crash', reopen, finish
+    broker = fill()
+    root = tempfile.mkdtemp(dir=work)
+    ckpt = os.path.join(root, "ckpt.json")
+    store = DurableStateStore(os.path.join(root, "state"))
+    _window_state_once(batch, size, store, ckpt, broker,
+                       max_batches=batches // 2)
+    store.close()
+    t0 = time.perf_counter()
+    store = DurableStateStore(os.path.join(root, "state"))
+    _window_state_once(batch, size, store, ckpt, broker)
+    resume = time.perf_counter() - t0
+    store.close()
+    shutil.rmtree(work, ignore_errors=True)
+    emit("ingest/window_restore", t_dur / batches,
+         f"{batches} windowed batches x {batch} rec (window {size}): durable "
+         f"state {t_dur:.3f}s vs in-memory {t_mem:.3f}s = "
+         f"{overhead:.2f}x/batch; mid-stream restart resumes the remaining "
+         f"half in {resume:.3f}s vs {t_dur:.3f}s cold re-ingest "
+         f"({t_dur / max(resume, 1e-9):.1f}x)")
+    return overhead
+
+
 def _backpressure(policy: str, records: int = 2000,
                   capacity_rec_s: float = 4000.0) -> None:
     """Overloaded pipeline: source produces ~10x what the consumer sustains.
@@ -351,6 +435,7 @@ def run(records: int = 20000, batch: int = 200) -> dict[str, float]:
         "ingest/produce_many": _produce_many_throughput(records, batch),
         "ingest/zero_copy": _zero_copy_throughput(2000, batch),
         "ingest/fanout_parallel": _fanout_throughput(),
+        "ingest/window_restore": _window_restore(),
     }
     _elastic_scale()
     _backpressure("drop")
@@ -359,11 +444,14 @@ def run(records: int = 20000, batch: int = 200) -> dict[str, float]:
 
 
 def check(records: int = 8000, batch: int = 200, min_ratio: float = 3.0,
-          min_fanout_ratio: float = 2.0) -> bool:
+          min_fanout_ratio: float = 2.0,
+          max_window_overhead: float = 1.3) -> bool:
     """Regression guards (`benchmarks/run.py --check`): batched produce_many
-    must beat per-record produce on records/s by min_ratio, and the parallel
+    must beat per-record produce on records/s by min_ratio, the parallel
     delivery runtime must beat serial fan_out on metrics-path wall-clock by
-    min_fanout_ratio with one slow sink in the fan."""
+    min_fanout_ratio with one slow sink in the fan, and the durable window
+    state store must cost at most max_window_overhead x the in-memory store
+    per windowed batch."""
     per_record = _remote_throughput(records // 4, batch)
     batched = _produce_many_throughput(records, batch)
     ratio = batched / per_record
@@ -376,7 +464,12 @@ def check(records: int = 8000, batch: int = 200, min_ratio: float = 3.0,
     print(f"# fanout_parallel metrics path {fan_ratio:.1f}x serial fan_out "
           f"with one slow sink (required >= {min_fanout_ratio}x): "
           f"{'OK' if fan_ok else 'REGRESSION'}")
-    return ok and fan_ok
+    overhead = _window_restore(records, batch)
+    w_ok = overhead <= max_window_overhead
+    print(f"# durable window state {overhead:.2f}x in-memory per batch "
+          f"(required <= {max_window_overhead}x): "
+          f"{'OK' if w_ok else 'REGRESSION'}")
+    return ok and fan_ok and w_ok
 
 
 if __name__ == "__main__":

@@ -10,10 +10,12 @@ Prints ``name,us_per_call,derived`` CSV. Roofline numbers for the LM cells
 come from the dry-run artifacts (launch/roofline.py), not from here.
 
 ``--check`` runs only the regression guards: batched ``ingest/produce_many``
-must beat per-record ``ingest/remote_transport`` on records/s, and the
+must beat per-record ``ingest/remote_transport`` on records/s, the
 parallel delivery runtime (``ingest/fanout_parallel``) must beat serial
 ``fan_out`` by >= 2x wall-clock on the metrics path with one slow sink in
-the fan (exit 1 on regression; ``make bench-check`` wires it into CI).
+the fan, and the durable window state store (``ingest/window_restore``)
+must cost <= 1.3x the in-memory store per windowed batch (exit 1 on
+regression; ``make bench-check`` wires it into CI).
 """
 from __future__ import annotations
 
@@ -34,6 +36,9 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--check-fanout-ratio", type=float, default=2.0,
                     help="minimum serial/parallel fan-out wall-clock ratio "
                          "with one slow sink for --check (default 2.0)")
+    ap.add_argument("--check-window-overhead", type=float, default=1.3,
+                    help="maximum durable/in-memory window state store "
+                         "per-batch cost ratio for --check (default 1.3)")
     args = ap.parse_args(argv)
 
     print("name,us_per_call,derived")
@@ -41,7 +46,8 @@ def main(argv: list[str] | None = None) -> int:
         from benchmarks import bench_ingest
         return 0 if bench_ingest.check(
             min_ratio=args.check_ratio,
-            min_fanout_ratio=args.check_fanout_ratio) else 1
+            min_fanout_ratio=args.check_fanout_ratio,
+            max_window_overhead=args.check_window_overhead) else 1
 
     from benchmarks import (bench_allreduce, bench_ingest, bench_ptycho,
                             bench_streaming, bench_tomo)

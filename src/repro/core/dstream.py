@@ -9,10 +9,16 @@ stay below the batch interval*, otherwise batches queue without bound.
 
 The scheduler runs inline (``run_batches``) for deterministic tests and
 benchmarks, or on a background thread (``start``/``stop``) for the streaming
-examples. Checkpointing of stream progress (consumed offsets) makes a
-restarted pipeline resume where it left off — offsets + replayable broker
-give at-least-once processing, upgraded to exactly-once when the sink is
-idempotent (both demonstrated in tests).
+examples. Checkpointing of stream progress makes a restarted pipeline resume
+where it left off — offsets + replayable broker give at-least-once
+processing, upgraded to exactly-once when the sink is idempotent (both
+demonstrated in tests). The checkpoint is epoch-stamped and commits consumed
+offsets *atomically with attached window state* (one ``os.replace``; see
+``repro/data/state.py``), so an open window's accumulated records survive a
+crash together with the offsets that consumed them. Serial sinks are
+delivered before the commit — a failing sink replays the batch rather than
+losing it; delivery *lanes* (``add_sink(policy=...)``) are asynchronous and
+keep their documented <= queue-depth post-commit crash window.
 
 The ``broker`` handed to :class:`StreamingContext` may equally be a
 :class:`~repro.data.transport.RemoteBroker` — same duck type, served from
@@ -51,21 +57,49 @@ class BatchInfo:
 
 @dataclass
 class StreamProgress:
-    """Consumed offsets per (topic, partition) — the restart checkpoint."""
+    """The restart checkpoint, epoch-stamped: consumed offsets per (topic,
+    partition) plus, per attached windower, the ref its state store returned
+    for this epoch. One ``save`` is one ``os.replace`` — offsets and window
+    state advance *together or not at all* (the atomicity the window state
+    layer builds on; see ``repro/data/state.py``)."""
     offsets: dict[str, list[int]] = field(default_factory=dict)
+    epoch: int = 0
+    window_refs: dict[str, int] = field(default_factory=dict)
 
     def save(self, path: str) -> None:
         tmp = path + ".tmp"
         with open(tmp, "w") as f:
-            json.dump({"offsets": self.offsets}, f)
+            json.dump({"epoch": self.epoch, "offsets": self.offsets,
+                       "window_refs": self.window_refs}, f)
+            # fsync before the rename: os.replace is atomic against a crash,
+            # but without it the new checkpoint's *contents* may not be on
+            # disk when the rename is — a power loss could surface a torn
+            # checkpoint exactly when recovery matters.
+            f.flush()
+            os.fsync(f.fileno())
         os.replace(tmp, path)
 
     @classmethod
     def load(cls, path: str) -> "StreamProgress":
+        """Load a checkpoint; a torn/corrupt/old-format file degrades to an
+        empty progress (with a warning) instead of making the restart
+        unrecoverable — the stream replays from offset 0 and idempotent
+        sinks absorb the duplicates (at-least-once, never stuck)."""
         if not os.path.exists(path):
             return cls()
-        with open(path) as f:
-            return cls(offsets=json.load(f)["offsets"])
+        try:
+            with open(path) as f:
+                blob = json.load(f)
+            offsets = {str(t): [int(o) for o in parts]
+                       for t, parts in blob["offsets"].items()}
+            return cls(offsets=offsets, epoch=int(blob.get("epoch", 0)),
+                       window_refs={str(k): int(v) for k, v in
+                                    blob.get("window_refs", {}).items()})
+        except (OSError, ValueError, KeyError, TypeError,
+                AttributeError) as exc:
+            log.warning("checkpoint %s is unreadable (%s: %s); starting "
+                        "from empty progress", path, type(exc).__name__, exc)
+            return cls()
 
 
 class StreamingContext:
@@ -84,6 +118,7 @@ class StreamingContext:
         # stream clock: stamps BatchInfo.scheduled_at and pumped-record
         # timestamps. Injectable so time-based windows are deterministic in
         # tests; scheduling waits always use real time.
+        self._default_clock = clock is None
         self._clock = clock or time.monotonic
         self._delivery = None          # lazy DeliveryRuntime (parallel sinks)
         self._topics: list[str] = []
@@ -93,6 +128,11 @@ class StreamingContext:
         # pull-model sources pumped inline before each micro-batch:
         # (source, topic, poll_batch)
         self._sources: list[tuple[Any, str, int]] = []
+        # per-topic produce round-robin cursor — persists across batches, so
+        # short polls don't restart at partition 0 every batch
+        self._rr: dict[str, int] = {}
+        # windowers whose state rides this context's commit protocol
+        self._window_states: list[tuple[str, Any]] = []
         self._progress = (StreamProgress.load(checkpoint_path)
                           if checkpoint_path else StreamProgress())
         self._history: list[BatchInfo] = []
@@ -107,8 +147,22 @@ class StreamingContext:
         if value_decoder is not None:
             self._decoder = value_decoder
         for t in self._topics:
-            self._progress.offsets.setdefault(
-                t, [0] * self.broker.num_partitions(t))
+            self._padded_offsets(t)
+
+    def _padded_offsets(self, topic: str,
+                        parts: int | None = None) -> list[int]:
+        """The checkpointed start offsets, padded with zeros to the broker's
+        *current* partition count. A checkpoint written before a topic was
+        repartitioned knows fewer partitions than the broker has — zipping
+        its starts against the broker's ends would silently never consume
+        the new partitions. Pass ``parts`` when the caller already knows the
+        count (saves a round trip on a remote broker)."""
+        starts = self._progress.offsets.setdefault(topic, [])
+        if parts is None:
+            parts = self.broker.num_partitions(topic)
+        if len(starts) < parts:
+            starts.extend([0] * (parts - len(starts)))
+        return starts
 
     def subscribe_source(self, source: Any, topic: str | None = None,
                          partitions: int = 1,
@@ -141,6 +195,49 @@ class StreamingContext:
 
     def foreach_batch(self, fn: Callable[[RDD, BatchInfo], Any]) -> None:
         self._batch_fn = fn
+        # windowed(...) tags its wrapper with the Windower it drives: attach
+        # it so window state joins this context's commit protocol
+        windower = getattr(fn, "windower", None)
+        if windower is not None:
+            self.attach_window_state(windower)
+
+    def attach_window_state(self, windower: Any,
+                            name: str | None = None) -> None:
+        """Tie a :class:`~repro.data.window.Windower` into the commit
+        protocol. Attached windowers are rolled back to their last committed
+        state when a batch fails (the replay must not find records already
+        half-pushed), and — when the windower carries a
+        :class:`~repro.data.state.WindowStateStore` and this context has a
+        ``checkpoint_path`` — their state is persisted each batch and
+        published atomically with the consumed offsets, then restored here
+        from the checkpoint's ref on a restart."""
+        if any(w is windower for _, w in self._window_states):
+            return                         # re-registered fn: already wired
+        name = name or f"window-{len(self._window_states)}"
+        if any(n == name for n, _ in self._window_states):
+            raise ValueError(f"window state {name!r} already attached")
+        self._window_states.append((name, windower))
+        store = getattr(windower, "store", None)
+        if store is None:
+            return
+        if not self.checkpoint_path:
+            log.warning("window state store attached but the context has no "
+                        "checkpoint_path: nothing to commit it against; the "
+                        "store will not be written")
+            return
+        state = store.restore(self._progress.window_refs.get(name))
+        if state is not None:
+            windower.restore_state(state)
+            if (state.t0 is not None and self._default_clock
+                    and getattr(getattr(windower, "spec", None), "kind",
+                                None) == "time"):
+                log.warning(
+                    "restored time-kind window state under the default "
+                    "time.monotonic clock: its stream epoch (t0=%r) came "
+                    "from the previous process and monotonic readings are "
+                    "not comparable across restarts — window arithmetic "
+                    "will be wrong. Inject a restart-comparable clock "
+                    "(e.g. time.time) or use count windows.", state.t0)
 
     def add_sink(self, fn: Callable[[BatchInfo], None],
                  policy: Any = None, name: str | None = None) -> None:
@@ -186,7 +283,9 @@ class StreamingContext:
         ranges: list[OffsetRange] = []
         for topic in self._topics:
             ends = self.broker.end_offsets(topic)
-            starts = self._progress.offsets[topic]
+            # re-pad every batch: the topic may have grown partitions since
+            # subscribe (or since the checkpoint was written)
+            starts = self._padded_offsets(topic, parts=len(ends))
             for p, (start, end) in enumerate(zip(starts, ends)):
                 if self.max_records_per_partition is not None:
                     end = min(end, start + self.max_records_per_partition)
@@ -195,16 +294,20 @@ class StreamingContext:
         return ranges
 
     def _pump_sources(self) -> None:
-        rr = {t: 0 for _, t, _ in self._sources}
+        # the round-robin cursor persists across batches (self._rr): resetting
+        # it every pump would land *every* record on partition 0 whenever a
+        # poll returns fewer records than the topic has partitions
         for source, topic, n in self._sources:
             if source.exhausted:
                 continue
             parts = self.broker.num_partitions(topic)
+            rr = self._rr.get(topic, 0)
             for key, value in source.poll(n):
                 self.broker.produce(topic, value, key=key,
-                                    partition=rr[topic] % parts,
+                                    partition=rr % parts,
                                     timestamp=self._clock())
-                rr[topic] += 1
+                rr += 1
+            self._rr[topic] = rr
 
     def run_one_batch(self) -> BatchInfo | None:
         """Paper Fig. 8 ``run_batch``: per-topic RDDs, union, process."""
@@ -223,30 +326,70 @@ class StreamingContext:
                       for rs in per_topic.values()]
         union = (topic_rdds[0].union(*topic_rdds[1:])
                  if len(topic_rdds) > 1 else topic_rdds[0])
+        # snapshot attached window state so a failed batch fn / serial sink
+        # rolls back cleanly: the replay must not find records half-pushed
+        rollback = [(w, w.state()) for _, w in self._window_states]
         t0 = time.perf_counter()
-        if self._batch_fn is not None:
-            info.result = self._batch_fn(union, info)
-        info.processing_time = time.perf_counter() - t0
-        # Commit offsets only after the batch succeeded (at-least-once).
-        # Progress is also pushed broker-side so producers in other processes
-        # (RemoteBroker -> BrokerServer) can bound their lag against it.
-        broker_commit = getattr(self.broker, "commit", None)
-        for r in ranges:
-            self._progress.offsets[r.topic][r.partition] = r.until
-            if broker_commit is not None:
-                broker_commit(r.topic, r.partition, r.until)
-        if self.checkpoint_path:
-            self._progress.save(self.checkpoint_path)
+        try:
+            if self._batch_fn is not None:
+                info.result = self._batch_fn(union, info)
+            info.processing_time = time.perf_counter() - t0
+            # Serial sinks run BEFORE the commit: a raising sink aborts the
+            # commit, so the batch (windower pushes included, via the
+            # rollback above) replays — the at-least-once contract the module
+            # docstring promises. Delivery lanes below keep their documented
+            # <= queue-depth post-commit crash window.
+            for sink in self._sinks:
+                sink(info)
+        except BaseException:
+            for w, st in rollback:
+                w.restore_state(st)
+            raise
+        self._commit(ranges)
         self._batch_index += 1
         self._history.append(info)
-        for sink in self._sinks:
-            sink(info)
         if self._delivery is not None:
             # parallel lanes: enqueue only; check() surfaces a fail_pipeline
             # lane's verdict (possibly from an earlier batch) and aborts here
             self._delivery.submit(info)
             self._delivery.check()
         return info
+
+    def _commit(self, ranges: Sequence[OffsetRange]) -> None:
+        """Advance consumed offsets + attached window state as one epoch.
+
+        Window stores persist first (each returns the ref for this epoch);
+        the checkpoint's single ``os.replace`` then publishes ``(offsets,
+        epoch, refs)`` together. A crash between the two leaves the previous
+        checkpoint pointing at the previous refs — the store's ``restore``
+        truncates the unpublished tail, and the interrupted batch replays
+        with its window pushes: offsets and window state move
+        both-or-neither, by construction.
+        """
+        epoch = self._progress.epoch + 1
+        if self.checkpoint_path:
+            for name, windower in self._window_states:
+                store = getattr(windower, "store", None)
+                if store is not None:
+                    self._progress.window_refs[name] = \
+                        store.commit(epoch, windower.state())
+        for r in ranges:
+            self._progress.offsets[r.topic][r.partition] = r.until
+        self._progress.epoch = epoch
+        if self.checkpoint_path:
+            self._progress.save(self.checkpoint_path)
+        # Progress is also pushed broker-side so producers in other processes
+        # (RemoteBroker -> BrokerServer) can bound their lag against it.
+        broker_commit = getattr(self.broker, "commit", None)
+        if broker_commit is not None:
+            for r in ranges:
+                broker_commit(r.topic, r.partition, r.until)
+
+    def checkpoint_now(self) -> None:
+        """Checkpoint current progress + window state outside the batch loop
+        — e.g. right after a terminal :meth:`Windower.flush`, so a restart
+        does not re-fire the final partial window."""
+        self._commit([])
 
     def run_batches(self, max_batches: int, wait_for_data: float = 0.0) -> list[BatchInfo]:
         """Inline scheduler: deterministic micro-batch loop for tests/benches."""
@@ -287,10 +430,17 @@ class StreamingContext:
         ``drain=True`` (default) every queued batch is written before the
         lanes exit — the no-lost-batches contract; ``drain=False`` discards
         queued work (fast teardown). Raises a pending
-        :class:`~repro.data.delivery.DeliveryFailed`."""
+        :class:`~repro.data.delivery.DeliveryFailed`. Attached window state
+        stores are closed (their last committed state stays on disk)."""
         self.stop()
-        if self._delivery is not None:
-            self._delivery.close(drain=drain)
+        try:
+            if self._delivery is not None:
+                self._delivery.close(drain=drain)
+        finally:
+            for _, windower in self._window_states:
+                store = getattr(windower, "store", None)
+                if store is not None:
+                    store.close()
 
     # -- near-real-time accounting ------------------------------------------
     def realtime_report(self) -> dict[str, float]:

@@ -72,11 +72,24 @@ class NearRealTimePipeline:
     """
 
     def __init__(self, broker: Broker, config: PipelineConfig,
-                 process: Callable[[RDD, BatchInfo, MPIBridge], Any],
+                 process: Callable[..., Any],
                  bridge: MPIBridge | None = None,
                  context: Context | None = None,
                  sources: Sequence[Any] = (),
-                 sinks: Sequence[Any] = ()) -> None:
+                 sinks: Sequence[Any] = (),
+                 window: Any = None,
+                 window_state: Any = None) -> None:
+        """Without ``window``, ``process(batch_rdd, info, bridge)`` runs once
+        per micro-batch. With ``window`` (a :class:`~repro.data.window
+        .WindowSpec`), records accumulate across micro-batches and
+        ``process(records, window_info, bridge)`` runs once per *complete*
+        window instead — "reconstruct over the last K frames" without
+        app-side buffering; call :meth:`flush_windows` at end-of-stream for
+        the final partial window. ``window_state`` (a :class:`~repro.data
+        .state.WindowStateStore`, e.g. ``DurableStateStore``) makes the open
+        window restart-safe: with ``config.checkpoint_path`` set, window
+        state commits atomically with the consumed offsets, so a killed
+        pipeline resumes mid-window with nothing lost or duplicated."""
         self.broker = broker
         self.config = config
         self.context = context or Context()
@@ -85,6 +98,7 @@ class NearRealTimePipeline:
         self._process = process
         self._sinks: list[Callable[[BatchInfo], None]] = []
         self._keyed_sinks: list[Any] = []
+        self.windower = None
         self.streaming = StreamingContext(
             self.context, broker,
             batch_interval=config.batch_interval,
@@ -93,7 +107,15 @@ class NearRealTimePipeline:
         self.streaming.subscribe(config.topics, config.value_decoder)
         for src in sources:
             self.subscribe_source(src)
-        self.streaming.foreach_batch(self._on_batch)
+        if window_state is not None and window is None:
+            raise ValueError("window_state requires a window spec")
+        if window is not None:
+            from repro.data.window import windowed
+            on_batch = windowed(window, self._on_window, store=window_state)
+            self.windower = on_batch.windower
+            self.streaming.foreach_batch(on_batch)
+        else:
+            self.streaming.foreach_batch(self._on_batch)
         self.streaming.add_sink(self._on_sink)
         for sink in sinks:
             if isinstance(sink, tuple):      # (sink, SinkPolicy) pair
@@ -153,6 +175,36 @@ class NearRealTimePipeline:
 
     def _on_batch(self, rdd: RDD, info: BatchInfo) -> Any:
         return self._process(rdd, info, self.bridge)
+
+    def _on_window(self, records: list, winfo: Any) -> Any:
+        return self._process(records, winfo, self.bridge)
+
+    def flush_windows(self) -> list:
+        """End-of-stream (windowed pipelines): fire the final partial window,
+        deliver its results to the keyed sinks, and only then checkpoint the
+        drained state — the same sinks-before-commit contract as a batch, so
+        a crash anywhere in between re-fires the partial window on restart
+        (idempotent keys absorb the replay) instead of losing it. Returns
+        the window results (``[]`` when nothing was pending)."""
+        if self.windower is None:
+            return []
+        snapshot = self.windower.state()
+        results = self.windower.flush()
+        if not results:
+            return []
+        try:
+            if self._keyed_sinks:
+                from repro.data.sinks import describe_result_items
+                items = describe_result_items(results,
+                                              self.streaming._batch_index)
+                for sink in self._keyed_sinks:
+                    sink.write_batch(items)
+        except BaseException:
+            self.windower.restore_state(snapshot)   # flush stays retryable
+            raise
+        if self.config.checkpoint_path:
+            self.streaming.checkpoint_now()
+        return results
 
     def _on_sink(self, info: BatchInfo) -> None:
         self.report.batches += 1

@@ -40,6 +40,11 @@ Class                             Reproduces
 ``durable_log.DurablePartitionLog``  Kafka's on-disk log segments: records
                                   survive a broker restart, torn tails are
                                   truncated by the recovery scan
+``state.DurableStateStore``       Flink-style window state backend: the open
+                                  window spilled to disk (snapshot + delta
+                                  frames), committed atomically with the
+                                  offset checkpoint so restarts resume
+                                  mid-window
 ================================  =============================================
 
 All sinks are idempotent by key, upgrading the dstream layer's at-least-once
@@ -58,6 +63,8 @@ from repro.data.sources import (DetectorSource, FileReplaySource,
                                 ProjectionSource, ReplayableSource,
                                 SequenceSource, Source, SyntheticRateSource,
                                 TopicSource, save_npz_capture)
+from repro.data.state import (DurableStateStore, InMemoryStateStore,
+                              WindowState, WindowStateStore)
 from repro.data.transport import (BrokerServer, FrameError, RemoteBroker,
                                   TransportError, parse_address, serve_broker)
 from repro.data.window import WindowInfo, WindowSpec, Windower, windowed
@@ -68,6 +75,8 @@ __all__ = [
     "SyntheticRateSource", "TopicSource", "save_npz_capture",
     "IngestConfig", "IngestRunner", "SourceMetrics", "ingest_all",
     "WindowSpec", "WindowInfo", "Windower", "windowed",
+    "WindowState", "WindowStateStore", "InMemoryStateStore",
+    "DurableStateStore",
     "Sink", "KeyedSink", "NpzDirectorySink", "TopicSink", "MetricsSink",
     "CallbackSink", "describe_result_items", "fan_out",
     "DeliveryRuntime", "SinkPolicy", "SinkLane", "LaneMetrics",

@@ -70,6 +70,42 @@ class LogCorruptionError(RuntimeError):
     it — disk corruption under a live log. Never returns garbage instead."""
 
 
+def frame_bytes(payload: bytes) -> bytes:
+    """One CRC frame, ``u32 length | u32 crc32 | payload`` — the segment
+    record format, shared with :mod:`repro.data.state`. Refuses payloads past
+    ``MAX_FRAME_BYTES``: the recovery scan treats larger lengths as
+    corruption, so such a frame would commit and then be destroyed (with
+    everything after it) on the next open."""
+    if len(payload) > MAX_FRAME_BYTES:
+        raise ValueError(
+            f"record of {len(payload)} bytes exceeds the "
+            f"{MAX_FRAME_BYTES}-byte durable-log record limit")
+    return _REC_HEADER.pack(len(payload), zlib.crc32(payload)) + payload
+
+
+def scan_frames(path: str) -> tuple[list[tuple[int, int]], int]:
+    """Recovery scan over one frame file: validate every frame front to back,
+    stopping at the first that does not hold (torn tail, truncated file,
+    insane length, CRC mismatch). Returns ``([(frame_pos, payload_len), ...],
+    valid_end)`` — callers truncate the file at ``valid_end`` to cut the
+    torn/corrupt tail and may re-read any listed frame at ``frame_pos``."""
+    frames: list[tuple[int, int]] = []
+    size = os.path.getsize(path)
+    pos = 0
+    with open(path, "rb") as f:
+        while pos + _REC_HEADER.size <= size:
+            length, crc = _REC_HEADER.unpack(f.read(_REC_HEADER.size))
+            if length > MAX_FRAME_BYTES or \
+                    pos + _REC_HEADER.size + length > size:
+                break                      # torn tail / insane length
+            payload = f.read(length)
+            if zlib.crc32(payload) != crc:
+                break                      # corrupt frame
+            frames.append((pos, length))
+            pos += _REC_HEADER.size + length
+    return frames, pos
+
+
 class DurablePartitionLog:
     """File-backed append-only log for one (topic, partition).
 
@@ -150,22 +186,12 @@ class DurablePartitionLog:
         Returns True if the whole segment was clean."""
         path = self._seg_path(seg_id)
         size = os.path.getsize(path)
-        pos = 0
-        with open(path, "rb") as f:
-            while pos + _REC_HEADER.size <= size:
-                length, crc = _REC_HEADER.unpack(f.read(_REC_HEADER.size))
-                if length > MAX_FRAME_BYTES or \
-                        pos + _REC_HEADER.size + length > size:
-                    break                  # torn tail / insane length
-                payload = f.read(length)
-                if zlib.crc32(payload) != crc:
-                    break                  # corrupt frame
-                self._index.append((seg_id, pos, length))
-                pos += _REC_HEADER.size + length
-        if pos < size:
-            self.truncated_bytes += size - pos
+        frames, valid_end = scan_frames(path)
+        self._index.extend((seg_id, pos, length) for pos, length in frames)
+        if valid_end < size:
+            self.truncated_bytes += size - valid_end
             with open(path, "ab") as f:
-                f.truncate(pos)
+                f.truncate(valid_end)
             return False
         return True
 
@@ -184,16 +210,7 @@ class DurablePartitionLog:
     # -- append ------------------------------------------------------------
     @staticmethod
     def _frame(key: bytes | None, value: Any, timestamp: float) -> bytes:
-        payload = b"".join(encode_message((key, value, timestamp)))
-        if len(payload) > MAX_FRAME_BYTES:
-            # the recovery scan rejects frames past this cap as corruption —
-            # a larger record would commit, read back fine, then be
-            # destroyed (with everything after it) on the next open. Refuse
-            # it up front instead, like the transport's sender-side check.
-            raise ValueError(
-                f"record of {len(payload)} bytes exceeds the "
-                f"{MAX_FRAME_BYTES}-byte durable-log record limit")
-        return _REC_HEADER.pack(len(payload), zlib.crc32(payload)) + payload
+        return frame_bytes(b"".join(encode_message((key, value, timestamp))))
 
     def _maybe_roll(self) -> None:
         if self._active_size >= self.segment_bytes and self._active_size > 0:

@@ -11,6 +11,15 @@ way — app-side buffering that this module absorbs into the platform).
 Count windows index records; time windows bucket by the arrival micro-batch's
 schedule time (micro-batch semantics: all records in a batch share its
 timestamp, exactly Spark's discretization).
+
+The open window is consumer *state*: records already pulled off the broker
+but not yet fired. Left in memory it dies with the process — after the
+offsets checkpointed past it — so a crash mid-window silently loses records.
+Hand the windower a :class:`~repro.data.state.WindowStateStore`
+(``Windower(spec, fn, store=...)`` / ``windowed(spec, fn, store=...)``) and
+:class:`~repro.core.dstream.StreamingContext` commits the window state
+atomically with the consumed offsets each batch, restoring both together on
+restart (see ``repro/data/state.py`` for the both-or-neither argument).
 """
 from __future__ import annotations
 
@@ -19,6 +28,7 @@ from typing import Any, Callable
 
 from repro.core.dstream import BatchInfo
 from repro.core.rdd import RDD
+from repro.data.state import WindowState, WindowStateStore
 
 
 @dataclass(frozen=True)
@@ -70,13 +80,31 @@ class Windower:
     """
 
     def __init__(self, spec: WindowSpec,
-                 fn: Callable[[list[Any], WindowInfo], Any]) -> None:
+                 fn: Callable[[list[Any], WindowInfo], Any],
+                 store: WindowStateStore | None = None) -> None:
         self.spec = spec
         self.fn = fn
+        self.store = store               # committed by the StreamingContext
         self._buf: list[_Pending] = []
         self._evicted = 0                # records dropped off the front
         self._t0: float | None = None    # stream epoch (time kind)
         self._windows_fired = 0
+
+    # -- restartable state --------------------------------------------------
+    def state(self) -> WindowState:
+        """Snapshot the restartable state (shallow: record values shared)."""
+        return WindowState(buf=[(p.value, p.ts, p.batch) for p in self._buf],
+                           evicted=self._evicted, t0=self._t0,
+                           windows_fired=self._windows_fired)
+
+    def restore_state(self, state: WindowState) -> None:
+        """Adopt a previously committed state — the restart path, and the
+        rollback path when a batch fails after pushing (the replay must not
+        find its records already half-pushed)."""
+        self._buf = [_Pending(v, ts, b) for v, ts, b in state.buf]
+        self._evicted = state.evicted
+        self._t0 = state.t0
+        self._windows_fired = state.windows_fired
 
     # -- record intake ------------------------------------------------------
     def push(self, records: list[Any], info: BatchInfo) -> list[Any]:
@@ -92,7 +120,14 @@ class Windower:
         return self._fire_time(now=rel)
 
     def flush(self) -> list[Any]:
-        """End-of-stream: fire one final partial window if records remain."""
+        """End-of-stream: fire one final partial window if records remain.
+
+        The partial ``WindowInfo`` keeps the complete-window contract that
+        ``end`` is an *exclusive bound* on the contents: one past the last
+        record index (count kind), or the open window's scheduled end
+        ``start + size`` (time kind — every buffered ``ts`` is below it,
+        exactly the bounds the window would have reported had it closed).
+        """
         if not self._buf:
             return []
         if self.spec.kind == "count":
@@ -100,7 +135,7 @@ class Windower:
             end = start + len(self._buf)
         else:
             start = self._windows_fired * self.spec.stride
-            end = max(p.ts for p in self._buf)
+            end = start + self.spec.size
         result = self._fire(self._buf, start, end, partial=True)
         self._buf = []
         return [result]
@@ -144,7 +179,8 @@ class Windower:
 
 def windowed(spec: WindowSpec,
              fn: Callable[[list[Any], WindowInfo], Any],
-             windower_out: list | None = None
+             windower_out: list | None = None,
+             store: WindowStateStore | None = None
              ) -> Callable[[RDD, BatchInfo], Any]:
     """Wrap a window function as a ``foreach_batch`` function.
 
@@ -153,12 +189,19 @@ def windowed(spec: WindowSpec,
     whenever a window completes; the batch result is the (possibly empty)
     list of window results. Pass ``windower_out=[]`` to receive the
     :class:`Windower` (index 0) for end-of-stream ``flush()``.
+
+    The returned function carries its :class:`Windower` as a ``windower``
+    attribute; ``StreamingContext.foreach_batch`` auto-attaches it to the
+    context's commit protocol (rollback on a failed batch and — with a
+    ``store`` and a ``checkpoint_path`` — restart-safe window state,
+    committed atomically with the consumed offsets).
     """
-    w = Windower(spec, fn)
+    w = Windower(spec, fn, store=store)
     if windower_out is not None:
         windower_out.append(w)
 
     def on_batch(rdd: RDD, info: BatchInfo) -> list[Any]:
         return w.push(rdd.collect(), info)
 
+    on_batch.windower = w
     return on_batch

@@ -47,7 +47,46 @@ def test_count_window_flush_fires_partial():
     w.push([1, 2, 3], _batch(0, 0.0))
     assert w.flush() == [3]
     assert fired[-1][3] == [1, 2, 3] and fired[-1][5] is True
+    # partial-window contract: end is an exclusive bound on the contents —
+    # one past the last record index for the count kind
+    assert (fired[-1][1], fired[-1][2]) == (0.0, 3.0)
     assert w.flush() == []                      # nothing left
+
+
+def test_count_window_flush_end_after_fired_windows():
+    fired, fn = collect_windows()
+    w = Windower(WindowSpec(size=4), fn)
+    w.push(list(range(10)), _batch(0, 0.0))     # windows [0,4), [4,8) fire
+    w.flush()
+    assert fired[-1] == (2, 8.0, 10.0, [8, 9], [0], True)
+
+
+def test_time_window_flush_end_is_exclusive_bound():
+    """Time-kind partial windows report the open window's scheduled bounds
+    [start, start + size) — an exclusive bound on every buffered timestamp,
+    exactly like a complete window (it used to report end = max(ts), a
+    timestamp *inside* the window, breaking the [start, end) contract)."""
+    fired, fn = collect_windows()
+    w = Windower(WindowSpec(size=1.0, kind="time"), fn)
+    w.push(["a"], _batch(0, 100.0))             # t=0.0
+    w.push(["b"], _batch(1, 101.2))             # t=1.2 closes [0,1)
+    w.push(["c"], _batch(2, 101.5))             # t=1.5, window [1,2) open
+    w.flush()
+    assert fired[0][1:3] == (0.0, 1.0)          # complete window
+    index, start, end, recs, _, partial = fired[1]
+    assert partial is True and recs == ["b", "c"]
+    assert (start, end) == (1.0, 2.0)           # scheduled bounds, not max(ts)
+    assert all(start <= t < end for t in (1.2, 1.5))
+
+
+def test_sliding_time_window_flush_bounds():
+    fired, fn = collect_windows()
+    w = Windower(WindowSpec(size=2.0, slide=1.0, kind="time"), fn)
+    w.push([1], _batch(0, 10.0))                # t=0
+    w.push([2], _batch(1, 12.5))                # t=2.5 closes [0,2)
+    w.flush()                                   # open window [1,3): [2]
+    assert fired[-1][1:3] == (1.0, 3.0) and fired[-1][5] is True
+    assert fired[-1][3] == [2]
 
 
 def test_tumbling_time_window():

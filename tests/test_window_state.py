@@ -1,0 +1,520 @@
+"""Restart-safe windowed state: store round-trips, snapshot/delta recovery,
+uncommitted-tail truncation, atomic (offsets, window state) checkpointing —
+and a real SIGKILL mid-window crash (spawn-context child, like
+``tests/test_durable_log.py``).
+
+The contract under test: with a ``DurableStateStore`` behind the windower,
+a restarted pipeline fires exactly the windows a never-crashed run fires —
+no record lost out of the open window, none duplicated into it — because
+window state and consumed offsets commit in one ``os.replace``.
+"""
+import json
+import multiprocessing as mp
+import os
+import signal
+import threading
+import time
+
+import pytest
+
+from repro.core import Broker, Context, StreamingContext
+from repro.data import (DurableStateStore, InMemoryStateStore, WindowSpec,
+                        WindowState, WindowStateStore, windowed)
+from repro.data.durable_log import DurableLogFactory
+
+
+def _state(buf, evicted=0, t0=None, fired=0):
+    return WindowState(buf=list(buf), evicted=evicted, t0=t0,
+                       windows_fired=fired)
+
+
+def _mk(vals, start=0):
+    """Buffer entries for records ``vals`` arriving one per batch."""
+    return [(v, 0.0, start + i) for i, v in enumerate(vals)]
+
+
+# -- stores: protocol + round trip -------------------------------------------
+
+def test_inmemory_store_round_trip():
+    store = InMemoryStateStore()
+    assert isinstance(store, WindowStateStore)
+    assert store.restore(None) is None
+    s = _state(_mk([1, 2, 3]), evicted=5, t0=10.0, fired=2)
+    ref = store.commit(7, s)
+    assert ref == 7
+    s.buf.append(("mutated", 0.0, 9))      # caller mutation must not leak in
+    got = store.restore(7)
+    assert got.buf == _mk([1, 2, 3]) and got.evicted == 5
+    assert got.t0 == 10.0 and got.windows_fired == 2
+    got.buf.clear()                        # nor leak back out
+    assert store.restore(7).buf == _mk([1, 2, 3])
+    assert store.restore(6) is None        # unknown ref: fresh start
+
+
+def test_durable_store_commit_restore_across_reopen(tmp_path):
+    path = str(tmp_path / "w")
+    with DurableStateStore(path) as store:
+        store.commit(1, _state(_mk([0, 1])))
+        store.commit(2, _state(_mk([0, 1, 2, 3])))
+        store.commit(3, _state(_mk([2, 3, 4], start=2), evicted=2, fired=1))
+    reopened = DurableStateStore(path)
+    assert reopened.recovered_frames == 3      # snap + 2 deltas
+    got = reopened.restore(3)
+    assert got.buf == _mk([2, 3, 4], start=2)
+    assert got.evicted == 2 and got.windows_fired == 1
+    # restoring an older epoch rewinds AND truncates the newer frames
+    reopened.close()
+    store2 = DurableStateStore(path)
+    got2 = store2.restore(2)
+    assert got2.buf == _mk([0, 1, 2, 3]) and got2.evicted == 0
+    store2.close()
+    assert DurableStateStore(path).restore(3).buf == _mk([0, 1, 2, 3])
+
+
+def test_durable_store_restore_none_resets(tmp_path):
+    path = str(tmp_path / "w")
+    with DurableStateStore(path) as store:
+        store.commit(1, _state(_mk([1, 2, 3])))
+    store = DurableStateStore(path)
+    # no checkpoint ref survived (e.g. corrupt checkpoint): state resets too,
+    # keeping offsets and window state consistent (both empty)
+    assert store.restore(None) is None
+    assert os.path.getsize(os.path.join(path, "state.log")) == 0
+    store.commit(1, _state(_mk([9])))
+    assert store.restore(1).buf == _mk([9])
+    store.close()
+
+
+def test_durable_store_unchanged_state_writes_nothing(tmp_path):
+    store = DurableStateStore(str(tmp_path / "w"))
+    s = _state(_mk([1, 2]), evicted=1, fired=1)
+    assert store.commit(4, s) == 4
+    size = os.path.getsize(store._file)
+    assert store.commit(5, s) == 4         # previous ref: nothing new on disk
+    assert os.path.getsize(store._file) == size
+    assert store.commit(6, _state(_mk([1, 2, 3]), evicted=1, fired=1)) == 6
+    store.close()
+
+
+def test_durable_store_torn_tail_truncated(tmp_path):
+    path = str(tmp_path / "w")
+    with DurableStateStore(path) as store:
+        store.commit(1, _state(_mk([0, 1])))
+        store.commit(2, _state(_mk([0, 1, 2])))
+    with open(os.path.join(path, "state.log"), "ab") as f:
+        f.write(b"\x00\x00\x00\x40TORN-DELTA-ONLY-PARTIALLY-WRITTEN")
+    store = DurableStateStore(path)
+    assert store.truncated_bytes > 0
+    assert store.restore(2).buf == _mk([0, 1, 2])
+    store.close()
+
+
+def test_durable_store_bit_flip_keeps_committed_prefix(tmp_path):
+    path = str(tmp_path / "w")
+    with DurableStateStore(path) as store:
+        store.commit(1, _state(_mk([0, 1, 2])))
+        store.commit(2, _state(_mk([0, 1, 2, 3, 4])))
+    blob = bytearray(open(os.path.join(path, "state.log"), "rb").read())
+    blob[-3] ^= 0x20                       # corrupt the delta frame
+    with open(os.path.join(path, "state.log"), "wb") as f:
+        f.write(blob)
+    store = DurableStateStore(path)
+    assert store.truncated_bytes > 0
+    # epoch 2's delta is gone; epoch 1's snapshot still restores
+    assert store.restore(2).buf == _mk([0, 1, 2])
+    store.close()
+
+
+def test_durable_store_compaction_bounds_file(tmp_path):
+    path = str(tmp_path / "w")
+    store = DurableStateStore(path, snapshot_every=4)
+    buf = []
+    for e in range(1, 41):
+        buf = buf[-3:] + [(e, 0.0, e)]     # sliding-ish: bounded buffer
+        store.commit(e, _state(buf, evicted=max(0, e - 4)))
+    # 40 commits, snapshot_every=4: the log holds <= 2 snapshots + 4 deltas,
+    # never the whole history
+    assert store.snapshots >= 8
+    size = os.path.getsize(store._file)
+    assert size < 8 * 1024
+    assert store.restore(40).buf == buf
+    store.close()
+    # the last two compaction anchors both restore (crash on either side of
+    # the caller's checkpoint write)
+    reopened = DurableStateStore(path, snapshot_every=4)
+    assert reopened.restore(40).buf == buf
+    reopened.close()
+
+
+def test_durable_store_compaction_keeps_previous_committed_epoch(tmp_path):
+    """The crash window the two-snapshot compaction exists for: the store
+    compacts at epoch N, the process dies before the offset checkpoint
+    publishes N — restore(N-1) must still work."""
+    path = str(tmp_path / "w")
+    store = DurableStateStore(path, snapshot_every=2)
+    store.commit(1, _state(_mk([0])))
+    store.commit(2, _state(_mk([0, 1])))
+    store.commit(3, _state(_mk([0, 1, 2])))   # delta budget spent
+    store.commit(4, _state(_mk([0, 1, 2, 3])))  # -> compaction [snap3, snap4]
+    store.close()
+    store = DurableStateStore(path)
+    assert store.restore(4).buf == _mk([0, 1, 2, 3])   # checkpoint saw 4
+    store.close()
+    store = DurableStateStore(path)
+    # checkpoint never saw 4: restoring 3 works AND truncates the epoch-4
+    # snapshot for good (it is uncommitted state)
+    assert store.restore(3).buf == _mk([0, 1, 2])
+    store.close()
+    store = DurableStateStore(path)
+    assert store.restore(4).buf == _mk([0, 1, 2])      # 4 is gone now
+    store.close()
+
+
+def test_durable_store_snapshot_on_rollback_shaped_change(tmp_path):
+    """Counters moving backwards (caller rolled the windower back) cannot be
+    expressed as a delta — the store must fall back to a snapshot, not
+    extrapolate garbage."""
+    store = DurableStateStore(str(tmp_path / "w"))
+    store.commit(1, _state(_mk([0, 1, 2]), evicted=6, fired=2))
+    store.commit(2, _state(_mk([9]), evicted=3, fired=1))   # went backwards
+    store.close()
+    store = DurableStateStore(str(tmp_path / "w"))
+    got = store.restore(2)
+    assert got.buf == _mk([9]) and got.evicted == 3 and got.windows_fired == 1
+    store.close()
+
+
+def test_durable_store_validation(tmp_path):
+    with pytest.raises(ValueError):
+        DurableStateStore(str(tmp_path / "a"), fsync="sometimes")
+    with pytest.raises(ValueError):
+        DurableStateStore(str(tmp_path / "b"), snapshot_every=0)
+
+
+# -- context integration: atomic (offsets, window state) ---------------------
+
+def _windowed_context(broker, ckpt, store, fired, size=10, per_batch=7):
+    sc = StreamingContext(Context(), broker, max_records_per_partition=per_batch,
+                          checkpoint_path=ckpt)
+    sc.subscribe(["t"])
+    wout = []
+    sc.foreach_batch(windowed(
+        WindowSpec(size=size),
+        lambda recs, wi: fired.append((wi.index, list(recs))),
+        store=store, windower_out=wout))
+    return sc, wout[0]
+
+
+def test_mid_window_restart_resumes_exactly(tmp_path):
+    """The tentpole behavior, in-process: offsets checkpoint mid-window, the
+    'process' dies, the restart restores the open window from the store and
+    fires exactly the windows an uninterrupted run fires."""
+    broker = Broker()
+    broker.create_topic("t", 1)
+    for i in range(40):
+        broker.produce("t", i)
+    ckpt = str(tmp_path / "ckpt.json")
+    fired = []
+    store = DurableStateStore(str(tmp_path / "w"))
+    sc, _ = _windowed_context(broker, ckpt, store, fired)
+    for _ in range(3):                     # 21 consumed: buf holds [20]
+        sc.run_one_batch()
+    assert [i for i, _ in fired] == [0, 1]
+    store.close()                          # crash
+
+    fired2 = []
+    store2 = DurableStateStore(str(tmp_path / "w"))
+    sc2, w2 = _windowed_context(broker, ckpt, store2, fired2)
+    while sc2.run_one_batch() is not None:
+        pass
+    assert fired2 == [(2, list(range(20, 30))), (3, list(range(30, 40)))]
+    assert w2.flush() == []                # nothing pending: 40 = 4 windows
+    store2.close()
+
+
+def test_in_memory_store_loses_open_window_but_api_matches(tmp_path):
+    """The degenerate path pins the pre-existing behavior: same wiring, but a
+    'restart' (new store) drops the open window — the records consumed into
+    it are gone. This is the hole DurableStateStore closes."""
+    broker = Broker()
+    broker.create_topic("t", 1)
+    for i in range(40):
+        broker.produce("t", i)
+    ckpt = str(tmp_path / "ckpt.json")
+    fired = []
+    sc, _ = _windowed_context(broker, ckpt, InMemoryStateStore(), fired)
+    for _ in range(3):
+        sc.run_one_batch()
+    fired2 = []
+    sc2, w2 = _windowed_context(broker, ckpt, InMemoryStateStore(), fired2)
+    while sc2.run_one_batch() is not None:
+        pass
+    w2.flush()
+    flat = [v for _, recs in fired + fired2 for v in recs]
+    assert 20 not in flat                  # record 20 was lost mid-window
+    assert sorted(flat) == [v for v in range(40) if v != 20]
+
+
+def test_in_memory_path_spawns_no_threads(tmp_path):
+    before = threading.active_count()
+    test_in_memory_store_loses_open_window_but_api_matches(tmp_path)
+    assert threading.active_count() == before
+
+
+def test_failed_serial_sink_rolls_back_window_state(tmp_path):
+    """A sink raising after the windower pushed must roll the window back:
+    the replayed batch pushes the same records again and the window fires
+    them once, not twice."""
+    broker = Broker()
+    broker.create_topic("t", 1)
+    for i in range(12):
+        broker.produce("t", i)
+    ckpt = str(tmp_path / "ckpt.json")
+    fired = []
+    store = InMemoryStateStore()
+    sc, _ = _windowed_context(broker, ckpt, store, fired, size=6, per_batch=6)
+    boom = {"armed": True}
+
+    def flaky_sink(info):
+        if boom["armed"]:
+            boom["armed"] = False
+            raise RuntimeError("transient sink failure")
+
+    sc.add_sink(flaky_sink)
+    with pytest.raises(RuntimeError):
+        sc.run_one_batch()                 # window 0 fired, then sink blew up
+    # nothing committed: offsets AND window state rolled back together
+    assert sc.committed("t") == 0
+    while sc.run_one_batch() is not None:
+        pass
+    # the replay re-fired window 0 with identical contents (idempotent by
+    # index), and no record appears in two different windows
+    assert fired[0] == fired[1] == (0, [0, 1, 2, 3, 4, 5])
+    assert fired[2] == (1, [6, 7, 8, 9, 10, 11])
+    assert len(fired) == 3
+
+
+def test_store_without_checkpoint_path_is_left_alone(tmp_path):
+    broker = Broker()
+    broker.create_topic("t", 1)
+    for i in range(10):
+        broker.produce("t", i)
+    sc = StreamingContext(Context(), broker, max_records_per_partition=5)
+    sc.subscribe(["t"])
+    store = DurableStateStore(str(tmp_path / "w"))
+    sc.foreach_batch(windowed(WindowSpec(size=5), lambda r, w: None,
+                              store=store))
+    while sc.run_one_batch() is not None:
+        pass
+    assert os.path.getsize(store._file) == 0   # nothing to commit against
+    store.close()
+
+
+def test_restore_warns_when_ref_beyond_log(tmp_path, caplog):
+    """A checkpoint ref with no frame on disk means a power loss outran the
+    fsync policy (the checkpoint always fsyncs): restore must warn and fall
+    back to the newest earlier state, never degrade silently."""
+    path = str(tmp_path / "w")
+    with DurableStateStore(path) as store:
+        store.commit(1, _state(_mk([0, 1])))
+    store = DurableStateStore(path)
+    with caplog.at_level("WARNING"):
+        got = store.restore(3)             # the epoch-3 frame never synced
+    assert got.buf == _mk([0, 1])
+    assert any("no frame for checkpoint ref 3" in r.message
+               for r in caplog.records)
+    store.close()
+
+
+def test_attach_warns_on_time_kind_restore_with_monotonic_clock(
+        tmp_path, caplog):
+    """time-kind t0 is a clock reading from the *previous* process; under
+    the default monotonic clock that is meaningless after a restart — the
+    attach path must say so at runtime, not only in docs."""
+    broker = Broker()
+    broker.create_topic("t", 1)
+    for i in range(4):
+        broker.produce("t", i)
+    ckpt = str(tmp_path / "ckpt.json")
+    store = DurableStateStore(str(tmp_path / "w"))
+    clock = {"t": 50.0}
+    sc = StreamingContext(Context(), broker, max_records_per_partition=2,
+                          checkpoint_path=ckpt, clock=lambda: clock["t"])
+    sc.subscribe(["t"])
+    sc.foreach_batch(windowed(WindowSpec(size=100.0, kind="time"),
+                              lambda r, w: None, store=store))
+    sc.run_one_batch()                     # t0 = 50.0 committed
+    store.close()
+
+    store2 = DurableStateStore(str(tmp_path / "w"))
+    with caplog.at_level("WARNING"):
+        sc2 = StreamingContext(Context(), broker, max_records_per_partition=2,
+                               checkpoint_path=ckpt)   # default clock
+        sc2.subscribe(["t"])
+        sc2.foreach_batch(windowed(WindowSpec(size=100.0, kind="time"),
+                                   lambda r, w: None, store=store2))
+    assert any("not comparable across restarts" in r.message
+               for r in caplog.records)
+    store2.close()
+    # an injected clock is trusted: no warning
+    caplog.clear()
+    store3 = DurableStateStore(str(tmp_path / "w"))
+    with caplog.at_level("WARNING"):
+        sc3 = StreamingContext(Context(), broker, max_records_per_partition=2,
+                               checkpoint_path=ckpt, clock=lambda: clock["t"])
+        sc3.subscribe(["t"])
+        sc3.foreach_batch(windowed(WindowSpec(size=100.0, kind="time"),
+                                   lambda r, w: None, store=store3))
+    assert not any("not comparable" in r.message for r in caplog.records)
+    store3.close()
+
+
+def test_pipeline_flush_delivers_to_keyed_sinks_before_checkpoint(tmp_path):
+    """The final partial window must reach the keyed sinks BEFORE the
+    drained state is checkpointed (sinks-before-commit, same as batches):
+    a sink failure leaves the windower and checkpoint un-drained so the
+    flush is retryable, and a successful flush is on disk before the
+    checkpoint forgets the window."""
+    from repro.core import NearRealTimePipeline, PipelineConfig
+    from repro.data import NpzDirectorySink
+
+    broker = Broker()
+    broker.create_topic("t", 1)
+    for i in range(13):
+        broker.produce("t", i)
+    sink = NpzDirectorySink(str(tmp_path / "npz"))
+    calls = {"fail": 1}
+    real_write = sink.write_batch
+
+    def flaky_write(items, **kw):
+        if calls["fail"] and any(k == "win-0001" for k, _ in items):
+            calls["fail"] -= 1             # fail the flush delivery once
+            raise OSError("disk hiccup")
+        return real_write(items, **kw)
+
+    sink.write_batch = flaky_write
+    pipeline = NearRealTimePipeline(
+        broker,
+        PipelineConfig(topics=("t",), max_records_per_partition=5,
+                       checkpoint_path=str(tmp_path / "ckpt.json")),
+        lambda recs, wi, bridge: (f"win-{wi.index:04d}",
+                                  {"n": len(recs)}),
+        window=WindowSpec(size=10),
+        window_state=DurableStateStore(str(tmp_path / "w")),
+        sinks=[sink])
+    pipeline.run_until_drained(producer_done=lambda: True, idle_timeout=0.05)
+    assert sink.keys_on_disk() == ["win-0000"]      # full window delivered
+    epoch_before = pipeline.streaming._progress.epoch
+    with pytest.raises(OSError):
+        pipeline.flush_windows()           # sink failed -> nothing committed
+    assert pipeline.streaming._progress.epoch == epoch_before
+    assert len(pipeline.windower._buf) == 3         # flush rolled back
+    results = pipeline.flush_windows()     # retry succeeds
+    assert [k for k, _ in results] == ["win-0001"]
+    assert sink.keys_on_disk() == ["win-0000", "win-0001"]
+    assert pipeline.streaming._progress.epoch == epoch_before + 1
+    assert pipeline.flush_windows() == []  # drained: idempotent
+    pipeline.close()
+
+
+# -- crash: SIGKILL mid-window ------------------------------------------------
+
+_WINDOW = 30
+_TOTAL = 600
+
+
+def _fire_to_dir(out_dir):
+    """Window fn: record each fired window idempotently by index — the keyed
+    sink discipline that upgrades replays to exactly-once."""
+    def fn(records, winfo):
+        tmp = os.path.join(out_dir, f".win-{winfo.index:04d}.tmp")
+        with open(tmp, "w") as f:
+            json.dump(records, f)
+        os.replace(tmp, os.path.join(out_dir, f"win-{winfo.index:04d}.json"))
+    return fn
+
+
+def _run_windowed(root, per_batch_sleep=0.0, max_batches=None):
+    broker = Broker(log_factory=DurableLogFactory(os.path.join(root, "wal")))
+    DurableLogFactory(os.path.join(root, "wal")).restore(broker)
+    store = DurableStateStore(os.path.join(root, "wstate"))
+    sc = StreamingContext(Context(), broker, max_records_per_partition=7,
+                          checkpoint_path=os.path.join(root, "ckpt.json"))
+    sc.subscribe(["t"])
+    sc.foreach_batch(windowed(WindowSpec(size=_WINDOW),
+                              _fire_to_dir(os.path.join(root, "windows")),
+                              store=store))
+    n = 0
+    while sc.run_one_batch() is not None:
+        n += 1
+        if per_batch_sleep:
+            time.sleep(per_batch_sleep)
+        if max_batches is not None and n >= max_batches:
+            break
+    store.close()
+
+
+def _crash_consumer(root):
+    """Child: consume slowly until SIGKILLed mid-window."""
+    _run_windowed(root, per_batch_sleep=0.05)
+
+
+def _windows_on_disk(root):
+    out = {}
+    wdir = os.path.join(root, "windows")
+    for name in sorted(os.listdir(wdir)):
+        if name.startswith("win-") and name.endswith(".json"):
+            with open(os.path.join(wdir, name)) as f:
+                out[int(name[4:-5])] = json.load(f)
+    return out
+
+
+def test_sigkill_mid_window_restart_fires_identical_windows(tmp_path):
+    """The acceptance test: records live in a durable-log broker, window
+    state in a DurableStateStore, offsets in the epoch checkpoint. SIGKILL
+    the consumer mid-window; the restarted pipeline must fire the exact
+    window set a never-crashed run fires — nothing lost off the open window,
+    nothing duplicated into another one."""
+    root = str(tmp_path)
+    os.makedirs(os.path.join(root, "windows"))
+    producer = Broker(log_factory=DurableLogFactory(os.path.join(root, "wal")))
+    producer.create_topic("t", 1)
+    producer.produce_many("t", [(None, i) for i in range(_TOTAL)], partition=0)
+
+    proc = mp.get_context("spawn").Process(target=_crash_consumer,
+                                           args=(root,), daemon=True)
+    proc.start()
+    ckpt = os.path.join(root, "ckpt.json")
+    deadline = time.monotonic() + 120
+    killed_at = None
+    while time.monotonic() < deadline:
+        if not proc.is_alive():
+            pytest.fail("consumer drained before it could be killed")
+        try:
+            with open(ckpt) as f:
+                consumed = sum(sum(v) for v in json.load(f)["offsets"].values())
+        except (OSError, ValueError, KeyError):
+            consumed = 0
+        # kill only once the open window is non-empty: offsets committed past
+        # a window boundary with records accumulated toward the next one
+        if consumed >= 3 * _WINDOW and consumed % _WINDOW != 0:
+            killed_at = consumed
+            os.kill(proc.pid, signal.SIGKILL)
+            break
+        time.sleep(0.002)
+    else:
+        proc.kill()
+        pytest.fail("never caught the consumer mid-window")
+    proc.join(timeout=30)
+    pre_crash = _windows_on_disk(root)
+    assert pre_crash, "no window fired before the kill"
+
+    # restart in-process over the same wal/checkpoint/state dirs
+    _run_windowed(root)
+
+    got = _windows_on_disk(root)
+    expect = {k: list(range(k * _WINDOW, (k + 1) * _WINDOW))
+              for k in range(_TOTAL // _WINDOW)}
+    assert got == expect, (
+        f"killed at offset {killed_at}: restarted run must reproduce the "
+        f"exact uncrashed window set")
