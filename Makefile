@@ -5,7 +5,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-data test-delivery test-state test-transport bench bench-check examples deps-check
+.PHONY: test test-data test-delivery test-state test-transport test-obs bench bench-check examples deps-check
 
 test:           ## tier-1: full suite, stop at first failure
 	$(PYTHON) -m pytest -x -q
@@ -27,10 +27,13 @@ test-transport: ## socket broker transport (framing properties, reconnect, cross
 	$(PYTHON) -m pytest -q tests/test_transport.py tests/test_transport_frames.py \
 	    tests/test_broker_parity.py
 
+test-obs:       ## telemetry: metrics registry, trace spans, observability endpoint
+	$(PYTHON) -m pytest -q tests/test_metrics.py tests/test_obs_server.py
+
 bench:          ## CSV benchmark sweep (includes bench_ingest)
 	$(PYTHON) -m benchmarks.run
 
-bench-check:    ## guards: produce_many >= 3x per-record, fan-out >= 2x serial, durable window state <= 1.3x in-memory
+bench-check:    ## guards: produce_many >= 3x per-record, fan-out >= 2x serial, durable window state <= 1.3x in-memory, metrics registry <= 1.1x registry-off
 	$(PYTHON) -m benchmarks.run --check
 
 examples:       ## fast end-to-end example runs

@@ -3,7 +3,7 @@ fast path, and backpressure behavior under overload (the near-real-time
 criterion stressed past its breaking point instead of only at the happy
 path).
 
-Nine measurements:
+Ten measurements:
   1. ingest/source_to_batch — raw records/s through SyntheticRateSource ->
      IngestRunner -> broker -> StreamingContext micro-batches (in-process).
   2. ingest/remote_transport — the same end-to-end path with every produce,
@@ -37,6 +37,9 @@ Nine measurements:
      capacity with the drop policy: lag stays bounded, overload is shed.
   9. ingest/backpressure_sample — same overload with the sample policy: the
      stream thins (every k-th record survives) but stays ordered and bounded.
+  10. ingest/obs_overhead — the telemetry tax: the source_to_batch run with a
+     live MetricsRegistry vs under metrics.disabled() (NullRegistry). The
+     regression guard asserts instrumented <= 1.1x registry-off wall-clock.
 """
 from __future__ import annotations
 
@@ -47,32 +50,66 @@ import time
 from benchmarks.common import emit, time_call
 
 
-def _throughput(records: int, batch: int) -> float:
+def _source_to_batch_once(records: int, batch: int) -> None:
+    """One in-process source -> ingest -> broker -> micro-batch drain (the
+    hot path both measurement 1 and the obs-overhead guard time)."""
     from repro.core import Broker, Context, StreamingContext
     from repro.data import IngestConfig, IngestRunner, SyntheticRateSource
 
-    def once() -> None:
-        broker = Broker()
-        sc = StreamingContext(Context(), broker,
-                              max_records_per_partition=batch // 2)
-        runner = IngestRunner(broker, consumer=sc)
-        src = SyntheticRateSource(rate=1e9, total=records)
-        runner.add(src, IngestConfig(topic="t", partitions=2,
-                                     poll_batch=batch))
-        sc.subscribe(["t"])
-        sc.foreach_batch(lambda rdd, info: rdd.count())
-        runner.start()
-        while not runner.done or sc.lag("t") > 0:
-            if sc.run_one_batch() is None:
-                time.sleep(0.0005)
-        runner.stop()
-        assert sum(b.num_records for b in sc.history) == records
+    broker = Broker()
+    sc = StreamingContext(Context(), broker,
+                          max_records_per_partition=batch // 2)
+    runner = IngestRunner(broker, consumer=sc)
+    src = SyntheticRateSource(rate=1e9, total=records)
+    runner.add(src, IngestConfig(topic="t", partitions=2,
+                                 poll_batch=batch))
+    sc.subscribe(["t"])
+    sc.foreach_batch(lambda rdd, info: rdd.count())
+    runner.start()
+    while not runner.done or sc.lag("t") > 0:
+        if sc.run_one_batch() is None:
+            time.sleep(0.0005)
+    runner.stop()
+    assert sum(b.num_records for b in sc.history) == records
 
-    sec = time_call(once, repeats=3)
+
+def _throughput(records: int, batch: int) -> float:
+    sec = time_call(lambda: _source_to_batch_once(records, batch), repeats=3)
     emit("ingest/source_to_batch", sec / records,
          f"{records} records end-to-end in {sec:.3f}s; "
          f"throughput {records / sec:.0f} rec/s")
     return records / sec
+
+
+def _obs_overhead(records: int = 20000, batch: int = 200) -> float:
+    """Measurement 10: the telemetry tax on the hot ingest path. The
+    identical source->batch run with a live MetricsRegistry (every layer's
+    counters/gauges/histograms registered and incremented) vs the same
+    components constructed under ``metrics.disabled()`` (NullRegistry no-op
+    instruments). Returns instrumented/bare wall-clock — the ``--check``
+    guard asserts <= 1.1x, so telemetry can never silently tax the path."""
+    from repro.data import metrics as M
+
+    # interleave the legs and keep each one's best pass: the run is short
+    # enough (~0.1s) that scheduler drift between two back-to-back blocks
+    # would otherwise dominate the few-percent effect being measured
+    t_on = t_off = float("inf")
+    for _ in range(2):
+        prev = M.set_registry(M.MetricsRegistry())
+        try:
+            t_on = min(t_on, time_call(
+                lambda: _source_to_batch_once(records, batch), repeats=3))
+        finally:
+            M.set_registry(prev)
+        with M.disabled():
+            t_off = min(t_off, time_call(
+                lambda: _source_to_batch_once(records, batch), repeats=3))
+    ratio = t_on / t_off
+    emit("ingest/obs_overhead", t_on / records,
+         f"{records} records: instrumented {t_on:.3f}s "
+         f"({records / t_on:.0f} rec/s) vs registry-off {t_off:.3f}s "
+         f"({records / t_off:.0f} rec/s) = {ratio:.3f}x")
+    return ratio
 
 
 def _remote_once(records: int, batch: int, flush_records: int,
@@ -436,6 +473,7 @@ def run(records: int = 20000, batch: int = 200) -> dict[str, float]:
         "ingest/zero_copy": _zero_copy_throughput(2000, batch),
         "ingest/fanout_parallel": _fanout_throughput(),
         "ingest/window_restore": _window_restore(),
+        "ingest/obs_overhead": _obs_overhead(records, batch),
     }
     _elastic_scale()
     _backpressure("drop")
@@ -445,13 +483,15 @@ def run(records: int = 20000, batch: int = 200) -> dict[str, float]:
 
 def check(records: int = 8000, batch: int = 200, min_ratio: float = 3.0,
           min_fanout_ratio: float = 2.0,
-          max_window_overhead: float = 1.3) -> bool:
+          max_window_overhead: float = 1.3,
+          max_obs_overhead: float = 1.1) -> bool:
     """Regression guards (`benchmarks/run.py --check`): batched produce_many
     must beat per-record produce on records/s by min_ratio, the parallel
     delivery runtime must beat serial fan_out on metrics-path wall-clock by
-    min_fanout_ratio with one slow sink in the fan, and the durable window
+    min_fanout_ratio with one slow sink in the fan, the durable window
     state store must cost at most max_window_overhead x the in-memory store
-    per windowed batch."""
+    per windowed batch, and the metrics registry must tax the ingest hot
+    path by at most max_obs_overhead x the registry-off run."""
     per_record = _remote_throughput(records // 4, batch)
     batched = _produce_many_throughput(records, batch)
     ratio = batched / per_record
@@ -469,7 +509,12 @@ def check(records: int = 8000, batch: int = 200, min_ratio: float = 3.0,
     print(f"# durable window state {overhead:.2f}x in-memory per batch "
           f"(required <= {max_window_overhead}x): "
           f"{'OK' if w_ok else 'REGRESSION'}")
-    return ok and fan_ok and w_ok
+    obs = _obs_overhead(records, batch)
+    obs_ok = obs <= max_obs_overhead
+    print(f"# metrics registry {obs:.3f}x registry-off on the ingest hot "
+          f"path (required <= {max_obs_overhead}x): "
+          f"{'OK' if obs_ok else 'REGRESSION'}")
+    return ok and fan_ok and w_ok and obs_ok
 
 
 if __name__ == "__main__":

@@ -13,9 +13,11 @@ come from the dry-run artifacts (launch/roofline.py), not from here.
 must beat per-record ``ingest/remote_transport`` on records/s, the
 parallel delivery runtime (``ingest/fanout_parallel``) must beat serial
 ``fan_out`` by >= 2x wall-clock on the metrics path with one slow sink in
-the fan, and the durable window state store (``ingest/window_restore``)
-must cost <= 1.3x the in-memory store per windowed batch (exit 1 on
-regression; ``make bench-check`` wires it into CI).
+the fan, the durable window state store (``ingest/window_restore``)
+must cost <= 1.3x the in-memory store per windowed batch, and the metrics
+registry (``ingest/obs_overhead``) must tax the instrumented ingest hot
+path by <= 1.1x the registry-off run (exit 1 on regression;
+``make bench-check`` wires it into CI).
 """
 from __future__ import annotations
 
@@ -39,6 +41,9 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--check-window-overhead", type=float, default=1.3,
                     help="maximum durable/in-memory window state store "
                          "per-batch cost ratio for --check (default 1.3)")
+    ap.add_argument("--check-obs-overhead", type=float, default=1.1,
+                    help="maximum instrumented/registry-off ingest "
+                         "wall-clock ratio for --check (default 1.1)")
     args = ap.parse_args(argv)
 
     print("name,us_per_call,derived")
@@ -47,7 +52,8 @@ def main(argv: list[str] | None = None) -> int:
         return 0 if bench_ingest.check(
             min_ratio=args.check_ratio,
             min_fanout_ratio=args.check_fanout_ratio,
-            max_window_overhead=args.check_window_overhead) else 1
+            max_window_overhead=args.check_window_overhead,
+            max_obs_overhead=args.check_obs_overhead) else 1
 
     from benchmarks import (bench_allreduce, bench_ingest, bench_ptycho,
                             bench_streaming, bench_tomo)

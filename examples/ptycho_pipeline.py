@@ -202,6 +202,10 @@ def main() -> None:
     ap.add_argument("--restart", action="store_true",
                     help="SIGKILL mid-window + resume: restart-safe windowed "
                          "state demo (durable WAL + DurableStateStore)")
+    ap.add_argument("--obs-port", type=int, default=None,
+                    help="serve the observability endpoint (/metrics, "
+                         "/metrics.json, /traces, /health) on this port "
+                         "while the pipeline runs (0 = ephemeral port)")
     ap.add_argument("--out", default="out")
     args = ap.parse_args()
     if args.fast or args.restart:
@@ -306,11 +310,26 @@ def main() -> None:
     else:
         pipeline.subscribe_source(source, topic="frames")
 
+    obs = None
+    if args.obs_port is not None:
+        # live while the stream runs: scrape /metrics mid-run, or watch
+        # /health flip to degraded when reconstruction falls behind
+        obs = pipeline.serve_observability(("127.0.0.1", args.obs_port),
+                                           lag_policy=policy)
+        print(f"observability endpoint: {obs.url}")
+
     t0 = time.time()
     report = pipeline.run_until_drained(
         producer_done=(lambda: runner.done) if runner else None)
     if runner is not None:
         runner.stop()
+    obs_snap = obs_spans = None
+    if obs is not None:        # fetch THROUGH the endpoint before close()
+        import urllib.request  # stops it — this is the end-to-end demo
+        with urllib.request.urlopen(obs.url + "/metrics.json") as r:
+            obs_snap = json.load(r)
+        with urllib.request.urlopen(obs.url + "/traces?last=1024") as r:
+            obs_spans = json.load(r)["spans"]
     pipeline.close()           # drain the artifact lane: all batches on disk
     stream_time = time.time() - t0
 
@@ -341,6 +360,22 @@ def main() -> None:
               f"failed {lane['failed']}, retries {lane['retries']}, "
               f"max depth {lane['max_depth']}, "
               f"mean latency {lane.get('mean_latency_s', 0.0):.4f}s")
+    if obs_spans:
+        # the trace spans answer "which stage ate the time", per batch epoch
+        stages: dict = {}
+        for s in obs_spans:
+            for k, v in s["stages"].items():
+                stages[k] = stages.get(k, 0.0) + v
+        span_total = max(sum(s["total_s"] for s in obs_spans), 1e-9)
+        batch_vals = {m["name"]: m["value"] for m in obs_snap["metrics"]
+                      if not m["labels"]}
+        print(f"\nobservability: {len(obs_spans)} batch spans (epochs "
+              f"{obs_spans[0]['epoch']}..{obs_spans[-1]['epoch']}), "
+              f"{batch_vals.get('stream_records_total', 0):.0f} records via "
+              f"{batch_vals.get('stream_batches_total', 0):.0f} batches; "
+              f"per-stage time:")
+        for k, v in sorted(stages.items(), key=lambda kv: -kv[1]):
+            print(f"  {k:16s} {v:8.3f}s  ({100 * v / span_total:5.1f}%)")
     if args.elastic:
         shed = sum(m.dropped + m.sampled_out for m in runner.metrics)
         peak = max((o.lag for o in policy.history), default=0)

@@ -40,6 +40,9 @@ def main() -> None:
     ap.add_argument("--partitions", type=int, default=4)
     ap.add_argument("--slice-interval", type=float, default=0.0,
                     help="seconds between streamed slices (acquisition rate)")
+    ap.add_argument("--obs-port", type=int, default=None,
+                    help="serve the observability endpoint on this port "
+                         "while the pipeline runs (0 = ephemeral port)")
     ap.add_argument("--out", default="out")
     args = ap.parse_args()
 
@@ -90,10 +93,21 @@ def main() -> None:
         context=ctx,
         sinks=[sink, metrics])
     pipeline.subscribe_source(source, topic="tilt-series")
+    obs = None
+    if args.obs_port is not None:
+        obs = pipeline.serve_observability(("127.0.0.1", args.obs_port))
+        print(f"observability endpoint: {obs.url}")
 
     t0 = time.time()
     pipeline.run_until_drained()
     dt = time.time() - t0
+    if obs is not None:
+        spans = pipeline.streaming.traces.last()
+        stages = pipeline.streaming.traces.stage_totals()
+        top = max(stages, key=stages.get) if stages else "-"
+        print(f"observability: {len(spans)} batch spans at {obs.url}/traces; "
+              f"slowest stage: {top} ({stages.get(top, 0.0):.3f}s)")
+        pipeline.close()       # stops the endpoint with the lanes
 
     # step 4: gather sub-volumes from the checkpoint store + render
     recon = np.zeros((args.nslice, args.nray, args.nray), np.float32)

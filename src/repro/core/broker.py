@@ -152,6 +152,30 @@ class Broker:
         self._topics: dict[str, list[PartitionLog]] = {}
         self._committed: dict[str, list[int]] = {}
         self._lock = threading.Lock()
+        # constructor-time import: repro.data.metrics pulls in the data
+        # package, which imports this module — at construction the cycle is
+        # long resolved. Instruments are cached per topic (one dict lookup
+        # per produce/read, no registry lookup on the hot path).
+        from repro.data.metrics import get_registry
+        self._registry = get_registry()
+        self._m_produce: dict[str, Any] = {}
+        self._m_read: dict[str, Any] = {}
+
+    def _register_topic_metrics(self, topic: str,
+                                logs: list[PartitionLog]) -> None:
+        self._m_produce[topic] = self._registry.counter(
+            "broker_produce_records_total",
+            "records appended to broker topics", labels={"topic": topic})
+        self._m_read[topic] = self._registry.counter(
+            "broker_read_records_total",
+            "records read out of broker topics", labels={"topic": topic})
+        self._registry.gauge(
+            "broker_log_records", "per-topic log size (sum of end offsets)",
+            labels={"topic": topic},
+            callback=lambda: sum(log.end_offset() for log in logs))
+        self._registry.gauge(
+            "broker_lag", "produced-but-uncommitted records per topic",
+            labels={"topic": topic}, callback=lambda: self.lag(topic))
 
     def _new_log(self, topic: str, partition: int) -> PartitionLog:
         if self._locate_logs:
@@ -162,9 +186,10 @@ class Broker:
         with self._lock:
             if topic in self._topics:
                 raise ValueError(f"topic {topic!r} exists")
-            self._topics[topic] = [self._new_log(topic, p)
-                                   for p in range(partitions)]
+            logs = [self._new_log(topic, p) for p in range(partitions)]
+            self._topics[topic] = logs
             self._committed[topic] = [0] * partitions
+        self._register_topic_metrics(topic, logs)
 
     def topics(self) -> list[str]:
         with self._lock:
@@ -185,7 +210,9 @@ class Broker:
         logs = self._topic(topic)
         if partition is None:
             partition = _route_partition(key, len(logs))
-        return logs[partition].append(key, value, timestamp)
+        offset = logs[partition].append(key, value, timestamp)
+        self._m_produce[topic].inc()
+        return offset
 
     def produce_many(self, topic: str, pairs: Sequence[tuple],
                      partition: int | None = None, timestamp: float = 0.0
@@ -229,13 +256,21 @@ class Broker:
             plog = logs[partition]
             append_many = getattr(plog, "append_many", None)
             if append_many is not None:
-                return list(append_many([(k, v) for k, v, _ in batch],
-                                        timestamp))
-        return [logs[p].append(k, v, timestamp) for k, v, p in batch]
+                offsets = list(append_many([(k, v) for k, v, _ in batch],
+                                           timestamp))
+                self._m_produce[topic].inc(len(offsets))
+                return offsets
+        offsets = [logs[p].append(k, v, timestamp) for k, v, p in batch]
+        self._m_produce[topic].inc(len(offsets))
+        return offsets
 
     # -- consumer ---------------------------------------------------------
     def read(self, rng: OffsetRange) -> list[Record]:
-        return self._topic(rng.topic)[rng.partition].read(rng.start, rng.until)
+        records = self._topic(rng.topic)[rng.partition].read(rng.start,
+                                                             rng.until)
+        if records:
+            self._m_read[rng.topic].inc(len(records))
+        return records
 
     def end_offset(self, topic: str, partition: int = 0) -> int:
         return self._topic(topic)[partition].end_offset()

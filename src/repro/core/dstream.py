@@ -35,6 +35,7 @@ import json
 import os
 import threading
 import time
+from contextlib import nullcontext
 from dataclasses import dataclass, field
 from typing import Any, Callable, Sequence
 
@@ -43,6 +44,12 @@ from repro.core.rdd import RDD, Context
 from repro.utils import get_logger
 
 log = get_logger(__name__)
+
+
+def _stage(rec: Any, name: str):
+    """A span-stage timer when a recorder is present, else a no-op — so
+    ``_commit`` reads the same with and without tracing."""
+    return rec.stage(name) if rec is not None else nullcontext()
 
 
 @dataclass
@@ -139,15 +146,39 @@ class StreamingContext:
         self._batch_index = 0
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
+        # constructor-time import: repro.data.metrics triggers the
+        # repro.data package __init__, whose window module imports *this*
+        # module — a top-level import here would see it half-initialized
+        from repro.data.metrics import TraceLog, get_registry
+        self.traces = TraceLog()
+        self._obs_server: Any = None
+        reg = self._registry = get_registry()
+        self._m_batches = reg.counter(
+            "stream_batches_total", help="micro-batches committed")
+        self._m_records = reg.counter(
+            "stream_records_total",
+            help="records processed by committed batches")
+        self._m_batch_s = reg.histogram(
+            "stream_batch_seconds", help="end-to-end micro-batch duration")
+        reg.gauge("stream_epoch",
+                  help="checkpoint epoch of the last committed batch",
+                  callback=lambda: self._progress.epoch)
 
     # -- wiring -------------------------------------------------------------
     def subscribe(self, topics: Sequence[str],
                   value_decoder: Callable[[Any], Any] | None = None) -> None:
-        self._topics.extend(t for t in topics if t not in self._topics)
+        new = [t for t in topics if t not in self._topics]
+        self._topics.extend(new)
         if value_decoder is not None:
             self._decoder = value_decoder
         for t in self._topics:
             self._padded_offsets(t)
+        for t in new:
+            # evaluated per scrape, not per batch (a round trip on a remote
+            # broker — priced where it is read, never on the hot path)
+            self._registry.gauge(
+                "stream_lag", help="produced-but-unprocessed records",
+                labels={"topic": t}, callback=lambda t=t: self.lag(t))
 
     def _padded_offsets(self, topic: str,
                         parts: int | None = None) -> list[int]:
@@ -311,14 +342,20 @@ class StreamingContext:
 
     def run_one_batch(self) -> BatchInfo | None:
         """Paper Fig. 8 ``run_batch``: per-topic RDDs, union, process."""
+        t_pump = time.perf_counter()
         if self._sources:
             self._pump_sources()
         ranges = self._pending_ranges()
+        pump_s = time.perf_counter() - t_pump
         if not ranges:
+            # no span for idle probes: the trace log holds batches, and an
+            # idle poll loop would otherwise drown them
             return None
         info = BatchInfo(index=self._batch_index, ranges=ranges,
                          num_records=sum(r.count() for r in ranges),
                          scheduled_at=self._clock())
+        rec = self.traces.begin(self._batch_index, info.num_records)
+        rec.add("pump", pump_s)
         per_topic: dict[str, list[OffsetRange]] = {}
         for r in ranges:
             per_topic.setdefault(r.topic, []).append(r)
@@ -331,31 +368,39 @@ class StreamingContext:
         rollback = [(w, w.state()) for _, w in self._window_states]
         t0 = time.perf_counter()
         try:
-            if self._batch_fn is not None:
-                info.result = self._batch_fn(union, info)
+            with rec.stage("batch_fn"):
+                if self._batch_fn is not None:
+                    info.result = self._batch_fn(union, info)
             info.processing_time = time.perf_counter() - t0
             # Serial sinks run BEFORE the commit: a raising sink aborts the
             # commit, so the batch (windower pushes included, via the
             # rollback above) replays — the at-least-once contract the module
             # docstring promises. Delivery lanes below keep their documented
             # <= queue-depth post-commit crash window.
-            for sink in self._sinks:
-                sink(info)
+            with rec.stage("sinks"):
+                for sink in self._sinks:
+                    sink(info)
         except BaseException:
             for w, st in rollback:
                 w.restore_state(st)
-            raise
-        self._commit(ranges)
+            raise                      # failed batches never enter the trace
+        self._commit(ranges, rec=rec)
         self._batch_index += 1
         self._history.append(info)
         if self._delivery is not None:
             # parallel lanes: enqueue only; check() surfaces a fail_pipeline
             # lane's verdict (possibly from an earlier batch) and aborts here
-            self._delivery.submit(info)
+            with rec.stage("delivery_submit"):
+                self._delivery.submit(info)
             self._delivery.check()
+        span = rec.finish(self._progress.epoch)
+        self._m_batches.inc()
+        self._m_records.inc(info.num_records)
+        self._m_batch_s.observe(span.total_s)
         return info
 
-    def _commit(self, ranges: Sequence[OffsetRange]) -> None:
+    def _commit(self, ranges: Sequence[OffsetRange],
+                rec: Any = None) -> None:
         """Advance consumed offsets + attached window state as one epoch.
 
         Window stores persist first (each returns the ref for this epoch);
@@ -368,22 +413,25 @@ class StreamingContext:
         """
         epoch = self._progress.epoch + 1
         if self.checkpoint_path:
-            for name, windower in self._window_states:
-                store = getattr(windower, "store", None)
-                if store is not None:
-                    self._progress.window_refs[name] = \
-                        store.commit(epoch, windower.state())
+            with _stage(rec, "state_commit"):
+                for name, windower in self._window_states:
+                    store = getattr(windower, "store", None)
+                    if store is not None:
+                        self._progress.window_refs[name] = \
+                            store.commit(epoch, windower.state())
         for r in ranges:
             self._progress.offsets[r.topic][r.partition] = r.until
         self._progress.epoch = epoch
         if self.checkpoint_path:
-            self._progress.save(self.checkpoint_path)
+            with _stage(rec, "checkpoint"):
+                self._progress.save(self.checkpoint_path)
         # Progress is also pushed broker-side so producers in other processes
         # (RemoteBroker -> BrokerServer) can bound their lag against it.
         broker_commit = getattr(self.broker, "commit", None)
         if broker_commit is not None:
-            for r in ranges:
-                broker_commit(r.topic, r.partition, r.until)
+            with _stage(rec, "broker_commit"):
+                for r in ranges:
+                    broker_commit(r.topic, r.partition, r.until)
 
     def checkpoint_now(self) -> None:
         """Checkpoint current progress + window state outside the batch loop
@@ -425,13 +473,33 @@ class StreamingContext:
             self._thread.join(timeout=10)
             self._thread = None
 
+    def serve_observability(self, address: tuple[str, int] = ("127.0.0.1", 0),
+                            lag_policy: Any = None):
+        """Start (or return) this context's HTTP observability endpoint:
+        ``/metrics`` + ``/metrics.json`` over the registry the context's
+        layers registered into, ``/traces`` over :attr:`traces`, and
+        ``/health`` judging per-topic lag against ``lag_policy``'s
+        ``scale_up_lag`` watermark (see ``repro/data/obs_server.py``).
+        Stopped by :meth:`close`; port 0 binds an ephemeral port — read the
+        bound address from the returned server's ``.url``."""
+        if self._obs_server is not None:
+            return self._obs_server
+        from repro.data.obs_server import ObservabilityServer, lag_health
+        health = lag_health(
+            lambda: {t: self.lag(t) for t in self._topics}, lag_policy)
+        self._obs_server = ObservabilityServer(
+            registry=self._registry, traces=self.traces,
+            health_fn=health, address=address).start()
+        return self._obs_server
+
     def close(self, drain: bool = True) -> None:
         """Stop the scheduler and shut down the delivery lanes. With
         ``drain=True`` (default) every queued batch is written before the
         lanes exit — the no-lost-batches contract; ``drain=False`` discards
         queued work (fast teardown). Raises a pending
         :class:`~repro.data.delivery.DeliveryFailed`. Attached window state
-        stores are closed (their last committed state stays on disk)."""
+        stores are closed (their last committed state stays on disk), and
+        the observability endpoint (if served) is stopped."""
         self.stop()
         try:
             if self._delivery is not None:
@@ -441,6 +509,9 @@ class StreamingContext:
                 store = getattr(windower, "store", None)
                 if store is not None:
                     store.close()
+            if self._obs_server is not None:
+                self._obs_server.stop()
+                self._obs_server = None
 
     # -- near-real-time accounting ------------------------------------------
     def realtime_report(self) -> dict[str, float]:

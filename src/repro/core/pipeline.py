@@ -243,6 +243,16 @@ class NearRealTimePipeline:
             time.sleep(self.config.batch_interval / 10 or 0.001)
         return self.report
 
+    # -- observability ---------------------------------------------------------
+    def serve_observability(self, address: tuple[str, int] = ("127.0.0.1", 0),
+                            lag_policy: Any = None):
+        """Start the pipeline's HTTP observability endpoint (``/metrics``,
+        ``/metrics.json``, ``/traces``, ``/health``) — delegates to
+        :meth:`repro.core.dstream.StreamingContext.serve_observability`;
+        stopped by :meth:`close`."""
+        return self.streaming.serve_observability(address=address,
+                                                  lag_policy=lag_policy)
+
     # -- parallel sink delivery ----------------------------------------------
     def close(self, drain: bool = True) -> None:
         """Shut down the delivery lanes (see ``StreamingContext.close``).

@@ -45,6 +45,15 @@ Class                             Reproduces
                                   frames), committed atomically with the
                                   offset checkpoint so restarts resume
                                   mid-window
+``metrics.MetricsRegistry``       Prometheus-style pull-model telemetry:
+                                  counters/gauges/histograms every layer
+                                  registers into, plus ring-buffer series
+                                  and batch-epoch trace spans (DELTA's
+                                  MongoDB timing store, CFAA's InfluxDB
+                                  points — kept in-process)
+``obs_server.ObservabilityServer``  the scrape endpoint over it: ``/metrics``
+                                  (Prometheus text), ``/metrics.json``,
+                                  ``/traces``, ``/health``
 ================================  =============================================
 
 All sinks are idempotent by key, upgrading the dstream layer's at-least-once
@@ -56,6 +65,12 @@ from repro.data.durable_log import (DurableLogFactory, DurablePartitionLog,
                                     LogCorruptionError)
 from repro.data.ingest import (IngestConfig, IngestRunner, SourceMetrics,
                                ingest_all)
+from repro.data.metrics import (BatchSpan, Counter, Gauge, Histogram,
+                                MetricsRegistry, NullRegistry, SPAN_STAGES,
+                                TraceLog, disabled, get_registry,
+                                set_registry)
+from repro.data.obs_server import (ObservabilityServer, lag_health,
+                                   serve_observability)
 from repro.data.sinks import (CallbackSink, KeyedSink, MetricsSink,
                               NpzDirectorySink, Sink, TopicSink,
                               describe_result_items, fan_out)
@@ -84,4 +99,8 @@ __all__ = [
     "BrokerServer", "RemoteBroker", "serve_broker", "parse_address",
     "TransportError", "FrameError",
     "DurablePartitionLog", "DurableLogFactory", "LogCorruptionError",
+    "MetricsRegistry", "Counter", "Gauge", "Histogram", "NullRegistry",
+    "get_registry", "set_registry", "disabled",
+    "TraceLog", "BatchSpan", "SPAN_STAGES",
+    "ObservabilityServer", "lag_health", "serve_observability",
 ]

@@ -37,7 +37,7 @@ from __future__ import annotations
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Sequence
+from typing import Any, Callable, Sequence
 
 from repro.core.broker import Broker
 from repro.data.sources import Source
@@ -126,6 +126,14 @@ class _Entry:
     buf: list = field(default_factory=list)   # (key, value, partition)
     buf_bytes: int = 0
     buf_oldest: float = 0.0        # monotonic time of oldest buffered record
+    # registry instruments, resolved once in add() so the pump loop pays a
+    # plain attribute read per event, never a registry lookup
+    m_polls: Any = None
+    m_produced: Any = None
+    m_dropped: Any = None
+    m_sampled: Any = None
+    m_blocked: Any = None
+    m_flush: Any = None
 
 
 class IngestRunner:
@@ -165,8 +173,38 @@ class IngestRunner:
         # partition count is immutable per topic: query once, not per poll
         # (over RemoteBroker that query is a full round trip)
         n = self.broker.num_partitions(config.topic)
-        self._entries.append(_Entry(source, config, m, partitions=n))
+        e = _Entry(source, config, m, partitions=n)
+        self._register_metrics(e)
+        self._entries.append(e)
         return m
+
+    def _register_metrics(self, e: _Entry) -> None:
+        # constructor-time import: repro.data.metrics must not be imported at
+        # module scope here (repro.data.__init__ import cycle)
+        from repro.data.metrics import COUNT_BUCKETS, get_registry
+        reg = get_registry()
+        topic = e.config.topic
+        labels = {"topic": topic}
+        e.m_polls = reg.counter(
+            "ingest_polls_total", help="source poll() calls", labels=labels)
+        e.m_produced = reg.counter(
+            "ingest_produced_records_total",
+            help="records handed to the broker", labels=labels)
+        e.m_dropped = reg.counter(
+            "ingest_dropped_records_total",
+            help="records shed by the drop policy", labels=labels)
+        e.m_sampled = reg.counter(
+            "ingest_sampled_out_records_total",
+            help="records thinned away by the sample policy", labels=labels)
+        e.m_blocked = reg.counter(
+            "ingest_blocked_seconds_total",
+            help="time the block policy held the source", labels=labels)
+        e.m_flush = reg.histogram(
+            "ingest_flush_records", help="records per batched flush",
+            labels=labels, buckets=COUNT_BUCKETS)
+        reg.gauge("ingest_lag", help="produced-but-unconsumed records",
+                  labels=labels,
+                  callback=lambda t=topic: self._lag_of(t))
 
     @property
     def metrics(self) -> list[SourceMetrics]:
@@ -238,6 +276,8 @@ class IngestRunner:
                                         and len(pairs) > 1 else len(pairs))
         e.metrics.produced += len(buf)
         e.metrics.last_produce_at = now
+        e.m_produced.inc(len(buf))
+        e.m_flush.observe(len(buf))
         return len(buf)
 
     def _pump_one(self, e: _Entry) -> int:
@@ -266,11 +306,14 @@ class IngestRunner:
                 # push the buffer through so the consumer sees it, then wait
                 self._flush(e)
                 m.blocked_s += self._idle_sleep
+                e.m_blocked.inc(self._idle_sleep)
                 return 0                  # do not poll; source waits
             records = src.poll(want)
             m.polls += 1
+            e.m_polls.inc()
             if cfg.policy == "drop":
                 m.dropped += len(records)
+                e.m_dropped.inc(len(records))
                 return 0
             # sample: thin to 1/stride, hard-capped so lag never exceeds
             # max_pending + poll_batch even when the consumer is stalled
@@ -278,12 +321,14 @@ class IngestRunner:
             hard_room = cfg.max_pending + cfg.poll_batch - lag - len(e.buf)
             kept = kept[:max(0, hard_room)]
             m.sampled_out += len(records) - len(kept)
+            e.m_sampled.inc(len(records) - len(kept))
             self._produce(e, kept)
             return len(kept)
         if cfg.policy == "block":
             want = min(want, room)
         records = src.poll(want)
         m.polls += 1
+        e.m_polls.inc()
         self._produce(e, records)
         return len(records)
 

@@ -173,36 +173,45 @@ class MetricsSink:
     """
 
     def __init__(self) -> None:
+        # both surfaces (observe + write_batch) may run on different
+        # delivery-lane worker threads; one lock keeps the counters and the
+        # report() snapshot consistent
+        self._lock = threading.Lock()
         self.batches = 0
         self.records = 0
         self.items = 0
         self.latencies: list[float] = []
 
     def observe(self, info: Any) -> None:
-        self.batches += 1
-        self.records += info.num_records
-        self.latencies.append(info.processing_time)
+        with self._lock:
+            self.batches += 1
+            self.records += info.num_records
+            self.latencies.append(info.processing_time)
 
     __call__ = observe
 
     def write_batch(self, items: Sequence[KeyedItem]) -> int:
-        self.items += len(items)
+        with self._lock:
+            self.items += len(items)
         return 0
 
     def close(self) -> None:
         pass
 
     def report(self) -> dict[str, float]:
-        if not self.latencies:
-            return {"batches": 0, "records": 0, "items": self.items}
-        total = max(sum(self.latencies), 1e-9)
+        with self._lock:
+            batches, records, items = self.batches, self.records, self.items
+            latencies = list(self.latencies)
+        if not latencies:
+            return {"batches": batches, "records": records, "items": items}
+        total = max(sum(latencies), 1e-9)
         return {
-            "batches": self.batches,
-            "records": self.records,
-            "items": self.items,
-            "mean_latency_s": sum(self.latencies) / len(self.latencies),
-            "max_latency_s": max(self.latencies),
-            "throughput_rec_per_s": self.records / total,
+            "batches": batches,
+            "records": records,
+            "items": items,
+            "mean_latency_s": sum(latencies) / len(latencies),
+            "max_latency_s": max(latencies),
+            "throughput_rec_per_s": records / total,
         }
 
 

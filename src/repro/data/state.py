@@ -182,6 +182,25 @@ class DurableStateStore:
         self.deltas = 0                  # delta frames written
         self.recovered_frames = 0        # valid frames found on open
         self.truncated_bytes = 0         # torn/corrupt tail cut on open
+        # constructor-time import (repro.data.__init__ import cycle);
+        # unlabeled on purpose: the store path is a tmpdir in tests and
+        # would explode label cardinality, so stores aggregate per process
+        from repro.data.metrics import get_registry
+        reg = get_registry()
+        self._m_commits = reg.counter(
+            "state_commits_total", help="window-state commits persisted")
+        self._m_deltas = reg.counter(
+            "state_delta_frames_total", help="delta frames appended")
+        self._m_snapshots = reg.counter(
+            "state_snapshots_total", help="snapshot compaction rewrites")
+        self._m_restores = reg.counter(
+            "state_restores_total", help="restore() replays")
+        self._m_commit_s = reg.histogram(
+            "state_commit_seconds", help="durable commit latency")
+        self._m_restore_s = reg.histogram(
+            "state_restore_seconds", help="restore replay latency")
+        reg.gauge("state_log_bytes", help="window-state log size on disk",
+                  callback=lambda: os.path.getsize(self._file))
         os.makedirs(self.path, exist_ok=True)
         self._file = os.path.join(self.path, _STATE_FILE)
         if os.path.exists(self._file):
@@ -230,6 +249,7 @@ class DurableStateStore:
 
     # -- protocol ----------------------------------------------------------
     def commit(self, epoch: int, state: WindowState) -> int:
+        t0 = time.perf_counter()
         with self._lock:
             delta = self._delta_against_prev(epoch, state)
             if delta == ():              # unchanged: keep the previous ref
@@ -240,9 +260,12 @@ class DurableStateStore:
                 self._maybe_fsync()
                 self._deltas_since_snap += 1
                 self.deltas += 1
+                self._m_deltas.inc()
             else:
                 self._compact(epoch, state)
             self._prev = (epoch, state.copy())
+            self._m_commits.inc()
+            self._m_commit_s.observe(time.perf_counter() - t0)
             return epoch
 
     def restore(self, ref: int | None) -> WindowState | None:
@@ -250,6 +273,8 @@ class DurableStateStore:
         but never published by the offset checkpoint — the crash window this
         store exists to close). ``ref=None`` (no/fresh checkpoint) resets the
         log entirely."""
+        # not t0: the replay loop below unpacks window-state t0 over it
+        t_start = time.perf_counter()
         with self._lock:
             state: WindowState | None = None
             last: tuple[int, int] | None = None      # (end_pos, epoch)
@@ -292,6 +317,8 @@ class DurableStateStore:
                 self._open_writer()
             self._deltas_since_snap = deltas_since if good else 0
             self._prev = (last[1], state.copy()) if good else None
+            self._m_restores.inc()
+            self._m_restore_s.observe(time.perf_counter() - t_start)
             return state.copy() if good else None
 
     def close(self) -> None:
@@ -352,3 +379,4 @@ class DurableStateStore:
         self._open_writer()
         self._deltas_since_snap = 0
         self.snapshots += 1
+        self._m_snapshots.inc()

@@ -288,14 +288,16 @@ def _send_parts(sock: socket.socket, parts, total: int, crc: int) -> None:
             views[0] = views[0][sent:]
 
 
-def send_message(sock: socket.socket, obj: Any) -> None:
-    """Encode ``obj`` (array-aware) and send it as one frame."""
+def send_message(sock: socket.socket, obj: Any) -> int:
+    """Encode ``obj`` (array-aware) and send it as one frame. Returns the
+    frame's payload size in bytes (what the byte counters account)."""
     parts = encode_message(obj)
     total, crc = _message_checksum(parts)
     if total > MAX_FRAME_BYTES:
         raise FrameError(f"message of {total} bytes exceeds the "
                          f"{MAX_FRAME_BYTES}-byte frame limit")
     _send_parts(sock, parts, total, crc)
+    return total
 
 
 def recv_message(sock: socket.socket) -> Any:
@@ -316,9 +318,11 @@ def _make_socket(address: Any) -> socket.socket:
 
 # The server executes exactly these broker methods; anything else is an error
 # frame, never an attribute lookup on the broker (no remote getattr).
+# "ping" and "stats" are served by the transport itself, not the broker.
 _OPS = frozenset({
     "create_topic", "topics", "num_partitions", "produce", "produce_many",
     "read", "end_offset", "end_offsets", "commit", "committed", "lag", "ping",
+    "stats",
 })
 
 
@@ -349,6 +353,23 @@ class BrokerServer:
         self.address: Any = None       # bound address, set by start()
         self.requests_served = 0
         self.frames_rejected = 0
+        # registry instruments (constructor-time import: see Broker.__init__)
+        from repro.data.metrics import get_registry
+        reg = get_registry()
+        self._m_requests = reg.counter(
+            "transport_requests_total",
+            "broker requests served over the socket transport")
+        self._m_rejected = reg.counter(
+            "transport_frames_rejected_total",
+            "malformed/torn frames rejected (connection dropped)")
+        self._m_bytes_in = reg.counter(
+            "transport_bytes_received_total",
+            "request frame payload bytes received")
+        self._m_bytes_out = reg.counter(
+            "transport_bytes_sent_total",
+            "response frame payload bytes sent")
+        reg.gauge("transport_connections", "live client connections",
+                  callback=lambda: len(self._conns))
 
     # -- lifecycle ---------------------------------------------------------
     def start(self) -> "BrokerServer":
@@ -415,20 +436,23 @@ class BrokerServer:
                     # after a bad header there is no resync point.
                     with self._lock:
                         self.frames_rejected += 1
+                    self._m_rejected.inc()
                     log.warning("rejecting connection: %s", e)
                     return
                 if payload is None:
                     return                 # client closed cleanly
+                self._m_bytes_in.inc(len(payload))
                 try:
-                    send_message(conn, self._dispatch(payload))
+                    sent = send_message(conn, self._dispatch(payload))
                 except FrameError:
                     # response too large for one frame: tell the client
                     # instead of dying silently (e.g. a read() of a huge
                     # offset range; the client should narrow it)
-                    send_message(conn, (
+                    sent = send_message(conn, (
                         "err", "FrameError",
                         f"response exceeds the {MAX_FRAME_BYTES}-byte "
                         f"frame limit; narrow the request"))
+                self._m_bytes_out.inc(sent)
         except OSError:
             pass                           # peer vanished mid-response
         finally:
@@ -444,11 +468,23 @@ class BrokerServer:
                 raise ValueError(f"unknown op {op!r}")
             with self._lock:
                 self.requests_served += 1
+            self._m_requests.inc()
             if op == "ping":
                 return ("ok", "pong")
+            if op == "stats":
+                return ("ok", self.stats())
             return ("ok", getattr(self.broker, op)(*args, **kwargs))
         except Exception as e:             # broker errors travel as frames
             return ("err", type(e).__name__, str(e))
+
+    def stats(self) -> dict:
+        """The server's own transport counters — served over the wire as the
+        ``stats`` op, so remote producers can see ``requests_served`` /
+        ``frames_rejected`` instead of only local attribute reads."""
+        with self._lock:
+            return {"requests_served": self.requests_served,
+                    "frames_rejected": self.frames_rejected,
+                    "connections": len(self._conns)}
 
 
 def serve_broker(broker: Broker, address: Any = ("127.0.0.1", 0)
@@ -486,6 +522,12 @@ class RemoteBroker:
         self._sock: socket.socket | None = None
         self._lock = threading.RLock()
         self.reconnects = 0
+        # constructor-time import: repro.data.metrics must not be imported at
+        # module scope here (repro.data.__init__ -> transport cycle)
+        from repro.data.metrics import get_registry
+        self._m_reconnects = get_registry().counter(
+            "transport_reconnects_total",
+            help="client reconnects after a dropped broker connection")
 
     # -- connection --------------------------------------------------------
     def _connect(self) -> None:
@@ -534,6 +576,7 @@ class RemoteBroker:
                         self._connect()
                         if attempt:
                             self.reconnects += 1
+                            self._m_reconnects.inc()
                     _send_parts(self._sock, parts, total, crc)
                     payload = recv_frame(self._sock)
                     if payload is None:
@@ -556,6 +599,11 @@ class RemoteBroker:
     # -- Broker surface ----------------------------------------------------
     def ping(self) -> bool:
         return self._request("ping") == "pong"
+
+    def stats(self) -> dict:
+        """Server-side transport counters (``requests_served``,
+        ``frames_rejected``, ``connections``) fetched over the wire."""
+        return self._request("stats")
 
     def create_topic(self, topic: str, partitions: int = 1) -> None:
         self._request("create_topic", topic, partitions)

@@ -369,6 +369,56 @@ def test_streaming_context_policy_sink_rides_a_lane():
     assert sc.delivery.report()["probe"]["delivered"] == len(sc.history)
 
 
+# -- report() counter semantics -----------------------------------------------
+
+def test_report_counter_semantics_under_concurrent_lanes():
+    """Three lanes running concurrently — healthy, slow, crash-then-heal —
+    report() returns exact per-lane counters, and the registry's
+    ``delivery_*`` instruments agree with them (one fact, two surfaces)."""
+    from repro.data.metrics import MetricsRegistry, set_registry
+    reg = MetricsRegistry()
+    prev = set_registry(reg)        # lanes cache instruments at construction
+    try:
+        runtime = DeliveryRuntime()
+        ok, slow = ChaosSink(), ChaosSink(sleep=0.02)
+        # fails calls 1-3: batch 0 burns both attempts (terminal failure),
+        # batch 1 fails once then heals on its retry, batches 2-5 are clean
+        flaky = ChaosSink(fail_first=3)
+        runtime.add_sink(ok, SinkPolicy(), name="ok")
+        runtime.add_sink(slow, SinkPolicy(), name="slow")
+        runtime.add_sink(flaky, SinkPolicy(retries=1), name="flaky")
+        _submit_all(runtime, 6)
+        assert runtime.drain(timeout=30)
+        rep = runtime.report()
+
+        assert rep["ok"]["enqueued"] == 6 and rep["ok"]["delivered"] == 6
+        assert rep["ok"]["failed"] == 0 and rep["ok"]["retries"] == 0
+        assert rep["slow"]["delivered"] == 6
+        assert rep["slow"]["mean_write_s"] >= 0.02
+        assert rep["flaky"]["enqueued"] == 6
+        assert rep["flaky"]["delivered"] == 5    # batch 1 healed on retry
+        assert rep["flaky"]["failed"] == 1       # batch 0 exhausted retries
+        assert rep["flaky"]["retries"] == 2      # one re-attempt per failure
+        assert "chaos" in rep["flaky"]["last_error"]
+        for lane in rep.values():
+            assert lane["depth"] == 0            # drained
+            assert lane["dropped_full"] == 0 and lane["dead_lettered"] == 0
+        assert rep["ok"]["max_latency_s"] >= rep["ok"]["mean_latency_s"] > 0
+
+        # the registry counters carry the same numbers
+        for lane, field, want in (("ok", "delivered", 6),
+                                  ("slow", "delivered", 6),
+                                  ("flaky", "delivered", 5),
+                                  ("flaky", "failed", 1),
+                                  ("flaky", "retries", 2),
+                                  ("flaky", "enqueued", 6)):
+            c = reg.counter(f"delivery_{field}_total", labels={"lane": lane})
+            assert c.value() == want, (lane, field)
+        runtime.close()
+    finally:
+        set_registry(prev)
+
+
 def test_serial_sinks_unaffected_by_delivery_runtime():
     """No policy => the degenerate serial path: no lanes, no threads."""
     before = threading.active_count()

@@ -1,0 +1,244 @@
+"""Observability endpoint tests: route behavior on a standalone server
+(Prometheus text, JSON snapshot, trace spans, health verdicts, 404/400),
+the lag_health degraded logic, and one full-stack run — a windowed pipeline
+consuming over the socket transport with a durable state store and a
+delivery lane, every layer's metrics and the batch-epoch spans read back
+through a live HTTP scrape (the issue's acceptance scenario).
+"""
+import json
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.core import Broker, Context, LagPolicy, StreamingContext
+from repro.data import (DurableStateStore, IngestConfig, IngestRunner,
+                        MetricsRegistry, ProjectionSource, SinkPolicy,
+                        TraceLog, WindowSpec, set_registry, windowed)
+from repro.data.metrics import SPAN_STAGES
+from repro.data.obs_server import ObservabilityServer, lag_health
+from repro.data.transport import RemoteBroker, serve_broker
+
+
+@pytest.fixture
+def registry():
+    """Fresh process-wide registry per test: components constructed inside
+    the test register here, not into state leaked by earlier tests."""
+    reg = MetricsRegistry()
+    prev = set_registry(reg)
+    yield reg
+    set_registry(prev)
+
+
+def _get(url, timeout=10):
+    with urllib.request.urlopen(url, timeout=timeout) as r:
+        return r.status, r.read()
+
+
+def _get_json(url):
+    status, body = _get(url)
+    return status, json.loads(body)
+
+
+# -- routes on a standalone server -------------------------------------------
+
+def test_all_routes_serve(registry):
+    registry.counter("hits_total", "requests").inc(5)
+    registry.gauge("depth", callback=lambda: 3)
+    registry.histogram("lat_seconds").observe(0.01)
+    traces = TraceLog()
+    rec = traces.begin(0, 8)
+    rec.add("batch_fn", 0.1)
+    rec.finish(epoch=1)
+    with ObservabilityServer(registry, traces=traces) as srv:
+        status, text = _get(srv.url + "/metrics")
+        text = text.decode()
+        assert status == 200
+        assert "repro_hits_total 5" in text
+        assert "repro_depth 3" in text
+        assert "repro_lat_seconds_count 1" in text
+
+        status, snap = _get_json(srv.url + "/metrics.json")
+        assert status == 200
+        names = {m["name"] for m in snap["metrics"]}
+        assert names == {"hits_total", "depth", "lat_seconds"}
+        # each scrape samples first: two scrapes -> two series points
+        assert all(len(m["series"]) == 2 for m in snap["metrics"])
+
+        status, spans = _get_json(srv.url + "/traces")
+        assert status == 200
+        assert spans["recorded"] == 1
+        assert spans["spans"][0]["epoch"] == 1
+        assert spans["spans"][0]["stages"]["batch_fn"] == pytest.approx(0.1)
+
+        status, health = _get_json(srv.url + "/health")
+        assert status == 200                  # no health_fn -> always ok
+        assert health == {"status": "ok", "topics": {}}
+
+
+def test_unknown_route_404_lists_routes(registry):
+    with ObservabilityServer(registry) as srv:
+        with pytest.raises(urllib.error.HTTPError) as e:
+            _get(srv.url + "/nope")
+        assert e.value.code == 404
+        body = json.loads(e.value.read())
+        assert "/metrics" in body["routes"] and "/health" in body["routes"]
+
+
+def test_traces_bad_last_is_400_and_last_n_limits(registry):
+    traces = TraceLog()
+    for i in range(5):
+        traces.begin(i, 1).finish(epoch=i + 1)
+    with ObservabilityServer(registry, traces=traces) as srv:
+        with pytest.raises(urllib.error.HTTPError) as e:
+            _get(srv.url + "/traces?last=abc")
+        assert e.value.code == 400
+        status, body = _get_json(srv.url + "/traces?last=2")
+        assert status == 200
+        assert [s["batch_index"] for s in body["spans"]] == [3, 4]
+        assert body["recorded"] == 5
+
+
+def test_start_is_idempotent_and_stop_releases(registry):
+    srv = ObservabilityServer(registry).start()
+    addr = srv.address
+    assert srv.start() is srv and srv.address == addr
+    url = srv.url
+    srv.stop()
+    srv.stop()                                # idempotent
+    with pytest.raises(urllib.error.URLError):
+        _get(url + "/health", timeout=2)
+    with pytest.raises(RuntimeError):
+        ObservabilityServer(registry).url     # not started: no address yet
+
+
+# -- health verdicts ----------------------------------------------------------
+
+def test_lag_health_degrades_on_watermark(registry):
+    lags = {"frames": 0}
+    policy = LagPolicy(100, 10, sustain=3, cooldown=5.0)
+    with ObservabilityServer(
+            registry, health_fn=lag_health(lambda: lags, policy)) as srv:
+        status, body = _get_json(srv.url + "/health")
+        assert status == 200
+        assert body["topics"]["frames"] == {
+            "lag": 0, "scale_up_lag": 100, "scale_down_lag": 10, "ok": True}
+
+        lags["frames"] = 100                  # at the scale-up watermark
+        with pytest.raises(urllib.error.HTTPError) as e:
+            _get(srv.url + "/health")
+        assert e.value.code == 503
+        body = json.loads(e.value.read())
+        assert body["status"] == "degraded"
+        assert body["topics"]["frames"]["ok"] is False
+
+
+def test_lag_health_without_policy_never_degrades():
+    health = lag_health(lambda: {"t": 10 ** 9})
+    assert health()["status"] == "ok"
+
+
+def test_lag_health_survives_torn_down_context():
+    def lag_of():
+        raise RuntimeError("context closed")
+    verdict = lag_health(lag_of, LagPolicy(100, 10))()
+    assert verdict["status"] == "degraded"
+    assert "context closed" in verdict["error"]
+
+
+# -- full stack: every layer visible through one live scrape ------------------
+
+def test_windowed_pipeline_over_transport_exposes_every_layer(
+        registry, tmp_path):
+    """ProjectionSource -> IngestRunner -> BrokerServer/RemoteBroker ->
+    windowed batch fn with a DurableStateStore -> delivery lane, observed
+    live: broker, transport, ingest, delivery, state, and stream metrics all
+    present on ``/metrics``, batch spans on ``/traces`` tagged with the
+    checkpoint epoch, ``/health`` judged against the lag policy."""
+    broker = Broker()
+    server = serve_broker(broker, str(tmp_path / "b.sock"))
+    client = RemoteBroker(server.address)
+    sc = StreamingContext(Context(), client, max_records_per_partition=8,
+                          checkpoint_path=str(tmp_path / "ckpt"))
+    try:
+        runner = IngestRunner(client, consumer=sc)
+        runner.add(ProjectionSource(np.arange(64.0).reshape(64, 1)),
+                   IngestConfig(topic="frames", poll_batch=16,
+                                flush_records=8))
+        sc.subscribe(["frames"])
+        windows = []
+        store = DurableStateStore(str(tmp_path / "state"))
+        sc.foreach_batch(windowed(
+            WindowSpec(size=16),
+            lambda recs, info: windows.append(len(recs)), store=store))
+        sc.add_sink(lambda info: None, policy=SinkPolicy(), name="probe")
+        policy = LagPolicy(1000, 10, sustain=3, cooldown=5.0)
+        obs = sc.serve_observability(("127.0.0.1", 0), lag_policy=policy)
+        assert sc.serve_observability() is obs          # idempotent
+
+        ticks = 0
+        while not (runner.done and sc.lag("frames") == 0):
+            runner.pump()
+            sc.run_one_batch()
+            ticks += 1
+            assert ticks < 500, "pipeline never drained"
+        assert windows == [16, 16, 16, 16]
+        assert sc.delivery.drain(timeout=10)
+
+        # one scrape carries every instrumented layer (repro_ namespace)
+        _, text = _get(obs.url + "/metrics")
+        text = text.decode()
+        for line in (
+                'repro_broker_produce_records_total{topic="frames"} 64',
+                'repro_broker_read_records_total{topic="frames"} 64',
+                'repro_broker_lag{topic="frames"} 0',
+                "repro_transport_requests_total",
+                "repro_transport_bytes_received_total",
+                "repro_transport_connections 1",
+                'repro_ingest_produced_records_total{topic="frames"} 64',
+                'repro_ingest_flush_records_count{topic="frames"} 8',
+                'repro_ingest_lag{topic="frames"} 0',
+                'repro_delivery_enqueued_total{lane="probe"} 8',
+                'repro_delivery_delivered_total{lane="probe"} 8',
+                'repro_delivery_queue_depth{lane="probe"} 0',
+                "repro_state_commits_total 8",
+                "repro_state_commit_seconds_count 8",
+                "repro_state_log_bytes",
+                "repro_stream_batches_total 8",
+                "repro_stream_records_total 64",
+                "repro_stream_epoch 8",
+                'repro_stream_lag{topic="frames"} 0',
+        ):
+            assert line in text, f"missing from /metrics: {line}"
+
+        # spans: one per committed batch, stamped with its checkpoint epoch
+        _, body = _get_json(obs.url + "/traces?last=100")
+        spans = body["spans"]
+        assert len(spans) == 8 and body["recorded"] == 8
+        assert [s["epoch"] for s in spans] == list(range(1, 9))
+        assert all(s["num_records"] == 8 for s in spans)
+        assert set(spans[-1]["stages"]) == set(SPAN_STAGES)
+        assert all(s["total_s"] >= sum(s["stages"].values()) * 0.5
+                   for s in spans)
+
+        # the satellite: server-side counters over the wire
+        stats = client.stats()
+        # batched produce_many keeps this well under one request per record
+        assert 0 < stats["requests_served"] < 64
+        assert stats["frames_rejected"] == 0
+        assert stats["connections"] >= 1
+
+        status, health = _get_json(obs.url + "/health")
+        assert status == 200
+        assert health["status"] == "ok"
+        assert health["topics"]["frames"]["lag"] == 0
+
+        url = obs.url
+        sc.close()                             # stops the endpoint too
+        with pytest.raises(urllib.error.URLError):
+            _get(url + "/health", timeout=2)
+    finally:
+        sc.close()
+        client.close()
+        server.stop()
