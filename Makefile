@@ -5,7 +5,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-data test-delivery test-state test-transport test-obs bench bench-check examples deps-check
+.PHONY: test test-data test-delivery test-state test-transport test-obs test-groups bench bench-check examples deps-check
 
 test:           ## tier-1: full suite, stop at first failure
 	$(PYTHON) -m pytest -x -q
@@ -29,6 +29,9 @@ test-transport: ## socket broker transport (framing properties, reconnect, cross
 
 test-obs:       ## telemetry: metrics registry, trace spans, observability endpoint
 	$(PYTHON) -m pytest -q tests/test_metrics.py tests/test_obs_server.py
+
+test-groups:    ## consumer groups: assignor properties, fencing, partition-handoff chaos suite
+	$(PYTHON) -m pytest -q tests/test_groups.py tests/test_broker_parity.py
 
 bench:          ## CSV benchmark sweep (includes bench_ingest)
 	$(PYTHON) -m benchmarks.run

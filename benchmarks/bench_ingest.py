@@ -3,7 +3,7 @@ fast path, and backpressure behavior under overload (the near-real-time
 criterion stressed past its breaking point instead of only at the happy
 path).
 
-Ten measurements:
+Eleven measurements:
   1. ingest/source_to_batch — raw records/s through SyntheticRateSource ->
      IngestRunner -> broker -> StreamingContext micro-batches (in-process).
   2. ingest/remote_transport — the same end-to-end path with every produce,
@@ -40,6 +40,12 @@ Ten measurements:
   10. ingest/obs_overhead — the telemetry tax: the source_to_batch run with a
      live MetricsRegistry vs under metrics.disabled() (NullRegistry). The
      regression guard asserts instrumented <= 1.1x registry-off wall-clock.
+  11. ingest/group_scaleout — consumer groups: records/s draining a
+     4-partition topic with 1, 2 and 4 group consumers (threaded, GIL-free
+     per-record work), plus the failover gap — wall-clock from one of two
+     consumers going silent (no leave) to the survivor owning its
+     partitions. The regression guard asserts 4 consumers >= 2x the
+     single-consumer rate.
 """
 from __future__ import annotations
 
@@ -427,6 +433,132 @@ def _window_restore(records: int = 8000, batch: int = 200) -> float:
     return overhead
 
 
+def _group_drain(consumers: int, per_part: int, work_s: float,
+                 group: str = "bench") -> float:
+    """Wall-clock for N threaded group consumers to drain a 4-partition
+    topic, each record costing ``work_s`` of sleep (releases the GIL, so
+    consumers genuinely overlap — the shape of a real per-record transform).
+    """
+    import threading
+
+    from repro.core import Broker, Context, StreamingContext
+    from repro.data import IngestConfig  # noqa: F401 (import parity)
+
+    parts = 4
+    broker = Broker()
+    broker.create_topic("t", parts)
+    for p in range(parts):
+        broker.produce_many("t", [(None, i) for i in range(per_part)],
+                            partition=p)
+    ctxs = []
+    for i in range(consumers):
+        sc = StreamingContext(Context(), broker,
+                              max_records_per_partition=25)
+        sc.subscribe(["t"])
+        sc.foreach_batch(lambda rdd, info: time.sleep(
+            work_s * info.num_records))
+        sc.join_group(group, consumer_id=f"c{i}", heartbeat_interval=0.05)
+        ctxs.append(sc)
+    for sc in ctxs:                        # settle before the clock starts
+        sc.group_member.maintain(force=True)
+
+    def drain(sc) -> None:
+        while broker.lag("t", group=group) > 0:
+            if sc.run_one_batch() is None:
+                time.sleep(0.0005)
+
+    threads = [threading.Thread(target=drain, args=(sc,)) for sc in ctxs]
+    t0 = time.perf_counter()
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    sec = time.perf_counter() - t0
+    assert broker.lag("t", group=group) == 0
+    for sc in ctxs:
+        sc.close()
+    return sec
+
+
+def _group_failover_gap(per_part: int = 2000, work_s: float = 0.0002,
+                        session_timeout: float = 0.4) -> float:
+    """Two group consumers; one goes silent mid-stream without leaving (a
+    crash). Returns seconds from silence to the survivor owning all four
+    partitions — the availability gap, bounded by the session timeout plus
+    one heartbeat round."""
+    import threading
+
+    from repro.core import Broker, Context, StreamingContext
+
+    broker = Broker()
+    broker.create_topic("t", 4)
+    for p in range(4):
+        broker.produce_many("t", [(None, i) for i in range(per_part)],
+                            partition=p)
+    stop = {"dead": False}
+    ctxs = []
+    for i in range(2):
+        sc = StreamingContext(Context(), broker,
+                              max_records_per_partition=25)
+        sc.subscribe(["t"])
+        sc.foreach_batch(lambda rdd, info: time.sleep(
+            work_s * info.num_records))
+        sc.join_group("benchf", consumer_id=f"c{i}",
+                      heartbeat_interval=0.05,
+                      session_timeout=session_timeout)
+        ctxs.append(sc)
+    survivor, victim = ctxs
+    survivor.group_member.maintain(force=True)
+
+    def run(sc, is_victim: bool) -> None:
+        while broker.lag("t", group="benchf") > 0:
+            if is_victim and stop["dead"]:
+                return                     # silent: no leave, no heartbeat
+            if sc.run_one_batch() is None:
+                time.sleep(0.0005)
+
+    threads = [threading.Thread(target=run, args=(sc, sc is victim))
+               for sc in ctxs]
+    for th in threads:
+        th.start()
+    time.sleep(0.1)                        # both consuming
+    stop["dead"] = True
+    t0 = time.perf_counter()
+    gap = None
+    while time.perf_counter() - t0 < 30.0:
+        owned = sum(len(ps) for ps in
+                    survivor.group_member.assignment.values())
+        if owned == 4:
+            gap = time.perf_counter() - t0
+            break
+        time.sleep(0.002)
+    for th in threads:
+        th.join()
+    for sc in ctxs:
+        sc.close()
+    return gap if gap is not None else float("inf")
+
+
+def _group_scaleout(per_part: int = 600, work_s: float = 0.0002) -> float:
+    """Measurement 11: group-consumer scale-out + failover gap. Returns the
+    4-consumer/1-consumer throughput ratio (the --check guard wants >= 2x).
+    """
+    total = 4 * per_part
+    rates = {}
+    for n in (1, 2, 4):
+        sec = min(_group_drain(n, per_part, work_s, group=f"bench{n}")
+                  for _ in range(3))
+        rates[n] = total / sec
+    gap = _group_failover_gap()
+    ratio = rates[4] / rates[1]
+    emit("ingest/group_scaleout", 1.0 / rates[4],
+         f"{total} records x {work_s * 1e6:.0f}us work: "
+         f"{rates[1]:.0f} rec/s @1 consumer, {rates[2]:.0f} @2, "
+         f"{rates[4]:.0f} @4 ({ratio:.1f}x); failover gap "
+         f"{gap * 1e3:.0f}ms (session timeout 400ms)")
+    return ratio
+
+
 def _backpressure(policy: str, records: int = 2000,
                   capacity_rec_s: float = 4000.0) -> None:
     """Overloaded pipeline: source produces ~10x what the consumer sustains.
@@ -474,6 +606,7 @@ def run(records: int = 20000, batch: int = 200) -> dict[str, float]:
         "ingest/fanout_parallel": _fanout_throughput(),
         "ingest/window_restore": _window_restore(),
         "ingest/obs_overhead": _obs_overhead(records, batch),
+        "ingest/group_scaleout": _group_scaleout(),
     }
     _elastic_scale()
     _backpressure("drop")
@@ -484,14 +617,17 @@ def run(records: int = 20000, batch: int = 200) -> dict[str, float]:
 def check(records: int = 8000, batch: int = 200, min_ratio: float = 3.0,
           min_fanout_ratio: float = 2.0,
           max_window_overhead: float = 1.3,
-          max_obs_overhead: float = 1.1) -> bool:
+          max_obs_overhead: float = 1.1,
+          min_group_scaleout: float = 2.0) -> bool:
     """Regression guards (`benchmarks/run.py --check`): batched produce_many
     must beat per-record produce on records/s by min_ratio, the parallel
     delivery runtime must beat serial fan_out on metrics-path wall-clock by
     min_fanout_ratio with one slow sink in the fan, the durable window
     state store must cost at most max_window_overhead x the in-memory store
-    per windowed batch, and the metrics registry must tax the ingest hot
-    path by at most max_obs_overhead x the registry-off run."""
+    per windowed batch, the metrics registry must tax the ingest hot
+    path by at most max_obs_overhead x the registry-off run, and four group
+    consumers must drain a 4-partition topic at >= min_group_scaleout x the
+    single-consumer rate."""
     per_record = _remote_throughput(records // 4, batch)
     batched = _produce_many_throughput(records, batch)
     ratio = batched / per_record
@@ -514,7 +650,12 @@ def check(records: int = 8000, batch: int = 200, min_ratio: float = 3.0,
     print(f"# metrics registry {obs:.3f}x registry-off on the ingest hot "
           f"path (required <= {max_obs_overhead}x): "
           f"{'OK' if obs_ok else 'REGRESSION'}")
-    return ok and fan_ok and w_ok and obs_ok
+    scale = _group_scaleout()
+    scale_ok = scale >= min_group_scaleout
+    print(f"# group scale-out {scale:.1f}x throughput at 4 consumers vs 1 "
+          f"(required >= {min_group_scaleout}x): "
+          f"{'OK' if scale_ok else 'REGRESSION'}")
+    return ok and fan_ok and w_ok and obs_ok and scale_ok
 
 
 if __name__ == "__main__":

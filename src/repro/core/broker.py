@@ -47,6 +47,10 @@ from typing import Any, Callable, Protocol, Sequence, runtime_checkable
 
 from repro.core.rdd import RDD, Context
 
+# Committed offsets are namespaced per consumer group; pre-group callers
+# (and the broker's own lag gauge) land on this default group.
+DEFAULT_GROUP = ""
+
 
 @dataclass(frozen=True)
 class Record:
@@ -150,8 +154,11 @@ class Broker:
             log_factory or InMemoryPartitionLog)
         self._locate_logs = _factory_wants_location(self._log_factory)
         self._topics: dict[str, list[PartitionLog]] = {}
-        self._committed: dict[str, list[int]] = {}
+        # topic -> group -> per-partition committed offsets
+        self._committed: dict[str, dict[str, list[int]]] = {}
         self._lock = threading.Lock()
+        self._coordinator: Any = None
+        self._coord_lock = threading.Lock()
         # constructor-time import: repro.data.metrics pulls in the data
         # package, which imports this module — at construction the cycle is
         # long resolved. Instruments are cached per topic (one dict lookup
@@ -188,7 +195,7 @@ class Broker:
                 raise ValueError(f"topic {topic!r} exists")
             logs = [self._new_log(topic, p) for p in range(partitions)]
             self._topics[topic] = logs
-            self._committed[topic] = [0] * partitions
+            self._committed[topic] = {DEFAULT_GROUP: [0] * partitions}
         self._register_topic_metrics(topic, logs)
 
     def topics(self) -> list[str]:
@@ -282,8 +289,11 @@ class Broker:
     # Committed offsets live broker-side so producers on *other* hosts can
     # bound their lag against what the consumer has actually processed
     # (IngestRunner backpressure over repro.data.transport). Commits are
-    # monotonic: replays never move progress backwards.
-    def commit(self, topic: str, partition: int, offset: int) -> None:
+    # monotonic: replays never move progress backwards. Each consumer group
+    # tracks its own offsets; groupless callers share ``DEFAULT_GROUP``.
+    def commit(self, topic: str, partition: int, offset: int,
+               group: str = DEFAULT_GROUP, consumer: str | None = None,
+               generation: int | None = None) -> None:
         # Network-facing via the transport: a bad partition (negative Python
         # indexing!) or an offset past the log end must not poison the lag
         # signal backpressure runs on.
@@ -297,18 +307,70 @@ class Broker:
                 f"commit offset {offset} outside "
                 f"[0, {logs[partition].end_offset()}] for "
                 f"{topic!r}[{partition}]")
+        if generation is not None:
+            # generation fencing: only a live member of `group` at the
+            # current generation that owns the partition may advance it —
+            # a zombie consumer's commit raises StaleGenerationError instead
+            # of silently corrupting the group's lag signal. Checked before
+            # taking self._lock (coordinator -> broker lock order).
+            self.coordinator.check_commit(group, consumer, generation,
+                                          topic=topic, partition=partition)
         with self._lock:
-            done = self._committed[topic]
+            done = self._committed[topic].setdefault(group, [0] * len(logs))
+            if len(done) < len(logs):
+                done.extend([0] * (len(logs) - len(done)))
             done[partition] = max(done[partition], offset)
 
-    def committed(self, topic: str) -> list[int]:
+    def committed(self, topic: str, group: str = DEFAULT_GROUP) -> list[int]:
+        logs = self._topic(topic)
+        with self._lock:
+            done = self._committed[topic].get(group)
+            if done is None:
+                return [0] * len(logs)
+            return done + [0] * (len(logs) - len(done))
+
+    def commit_groups(self, topic: str) -> list[str]:
+        """Groups with committed offsets on ``topic`` (default group first)."""
         self._topic(topic)
         with self._lock:
-            return list(self._committed[topic])
+            return sorted(self._committed[topic])
 
-    def lag(self, topic: str) -> int:
-        """Produced-but-uncommitted records — the backpressure signal."""
-        return sum(self.end_offsets(topic)) - sum(self.committed(topic))
+    def lag(self, topic: str, group: str = DEFAULT_GROUP) -> int:
+        """Produced-but-uncommitted records — the backpressure signal,
+        measured against ``group``'s committed offsets."""
+        return sum(self.end_offsets(topic)) - sum(self.committed(topic,
+                                                                 group))
+
+    # -- consumer groups ---------------------------------------------------
+    @property
+    def coordinator(self):
+        """The broker-hosted :class:`~repro.data.groups.GroupCoordinator`
+        (created on first use — lazy import, the data package imports this
+        module). Tests inject a fake-clock coordinator by assigning
+        ``broker._coordinator`` before the first group op."""
+        with self._coord_lock:
+            if self._coordinator is None:
+                from repro.data.groups import GroupCoordinator
+                self._coordinator = GroupCoordinator(self)
+            return self._coordinator
+
+    def join_group(self, group: str, consumer: str, topics: Sequence[str],
+                   session_timeout: float = 5.0) -> dict:
+        return self.coordinator.join_group(group, consumer, topics,
+                                           session_timeout=session_timeout)
+
+    def heartbeat(self, group: str, consumer: str, generation: int) -> dict:
+        return self.coordinator.heartbeat(group, consumer, generation)
+
+    def sync_group(self, group: str, consumer: str,
+                   generation: int) -> dict:
+        return self.coordinator.sync_group(group, consumer, generation)
+
+    def leave_group(self, group: str, consumer: str) -> None:
+        return self.coordinator.leave_group(group, consumer)
+
+    def describe_group(self, group: str) -> dict:
+        return self.coordinator.describe(group)
 
 
 def create_rdd(context: Context, broker: Broker,

@@ -140,6 +140,14 @@ class StreamingContext:
         self._rr: dict[str, int] = {}
         # windowers whose state rides this context's commit protocol
         self._window_states: list[tuple[str, Any]] = []
+        # consumer-group mode (join_group): when set, only assigned
+        # partitions are consumed and broker commits carry (group, consumer,
+        # generation) so the coordinator can fence stale owners
+        self.group_member: Any = None
+        self._group_owned: dict[str, set[int]] = {}
+        self._group_start_offset: Callable[[str, int], int | None] | None = \
+            None
+        self._group_on_rebalance: Callable[[dict, dict], None] | None = None
         self._progress = (StreamProgress.load(checkpoint_path)
                           if checkpoint_path else StreamProgress())
         self._history: list[BatchInfo] = []
@@ -173,6 +181,11 @@ class StreamingContext:
             self._decoder = value_decoder
         for t in self._topics:
             self._padded_offsets(t)
+        if new and self.group_member is not None:
+            # subscription changed while in a group: re-join so the
+            # coordinator assigns the new topics' partitions too
+            self.group_member.topics = list(self._topics)
+            self.group_member.join()
         for t in new:
             # evaluated per scrape, not per batch (a round trip on a remote
             # broker — priced where it is read, never on the hot path)
@@ -223,6 +236,70 @@ class StreamingContext:
             n = 64
         self._sources.append((source, topic, n))
         return topic
+
+    # -- consumer-group mode ------------------------------------------------
+    def join_group(self, group: str, consumer_id: str | None = None, *,
+                   heartbeat_interval: float = 1.0,
+                   session_timeout: float = 5.0,
+                   start_offset: Callable[[str, int], int | None] | None = None,
+                   on_rebalance: Callable[[dict, dict], None] | None = None,
+                   clock: Callable[[], float] | None = None) -> Any:
+        """Enter consumer-group mode: this context consumes only the
+        partitions the group coordinator assigns it, heartbeats at the top
+        of every micro-batch, and commits offsets under ``(group, consumer,
+        generation)`` so a stale owner is fenced instead of corrupting the
+        group's progress.
+
+        ``start_offset(topic, partition)`` resolves where a newly *gained*
+        partition starts (e.g. from a handoff checkpoint — see
+        :class:`~repro.data.groups.GroupConsumer`); returning ``None`` falls
+        back to the group's committed offset on the broker. ``on_rebalance
+        (old_assignment, new_assignment)`` fires after the context applied
+        an ownership change. Returns the :class:`~repro.data.groups
+        .GroupMember` (whose ``leave()`` runs automatically in
+        :meth:`close`)."""
+        from repro.data.groups import GroupMember
+        if self.group_member is not None:
+            raise ValueError("context already joined group "
+                             f"{self.group_member.group!r}")
+        self._group_start_offset = start_offset
+        self._group_on_rebalance = on_rebalance
+        self.group_member = GroupMember(
+            self.broker, group, consumer_id, topics=list(self._topics),
+            heartbeat_interval=heartbeat_interval,
+            session_timeout=session_timeout, clock=clock,
+            on_rebalance=self._apply_group_assignment)
+        self._registry.gauge(
+            "stream_group_partitions",
+            help="partitions this consumer currently owns",
+            labels={"group": group},
+            callback=lambda: sum(len(p) for p in self._group_owned.values()))
+        self.group_member.join()
+        return self.group_member
+
+    def _apply_group_assignment(self, old: dict, new: dict) -> None:
+        """Adopt a new partition assignment: newly gained partitions get
+        their start offset resolved (handoff checkpoint, else the group's
+        broker-committed offset); lost partitions simply stop appearing in
+        :meth:`_pending_ranges`. Fires the user ``on_rebalance`` last."""
+        member = self.group_member
+        for topic in self._topics:
+            owned = set(new.get(topic, []))
+            prev = self._group_owned.get(topic, set())
+            starts = self._padded_offsets(topic)
+            for p in sorted(owned - prev):
+                start = None
+                if self._group_start_offset is not None:
+                    start = self._group_start_offset(topic, p)
+                if start is None:
+                    done = self.broker.committed(topic, group=member.group)
+                    start = done[p] if p < len(done) else 0
+                if p >= len(starts):
+                    starts.extend([0] * (p + 1 - len(starts)))
+                starts[p] = int(start)
+            self._group_owned[topic] = owned
+        if self._group_on_rebalance is not None:
+            self._group_on_rebalance(old, new)
 
     def foreach_batch(self, fn: Callable[[RDD, BatchInfo], Any]) -> None:
         self._batch_fn = fn
@@ -311,13 +388,17 @@ class StreamingContext:
 
     # -- one micro-batch ------------------------------------------------------
     def _pending_ranges(self) -> list[OffsetRange]:
+        in_group = self.group_member is not None
         ranges: list[OffsetRange] = []
         for topic in self._topics:
             ends = self.broker.end_offsets(topic)
             # re-pad every batch: the topic may have grown partitions since
             # subscribe (or since the checkpoint was written)
             starts = self._padded_offsets(topic, parts=len(ends))
+            owned = self._group_owned.get(topic, set()) if in_group else None
             for p, (start, end) in enumerate(zip(starts, ends)):
+                if owned is not None and p not in owned:
+                    continue           # another group member owns it
                 if self.max_records_per_partition is not None:
                     end = min(end, start + self.max_records_per_partition)
                 if end > start:
@@ -342,6 +423,10 @@ class StreamingContext:
 
     def run_one_batch(self) -> BatchInfo | None:
         """Paper Fig. 8 ``run_batch``: per-topic RDDs, union, process."""
+        if self.group_member is not None:
+            # heartbeat / rejoin as due; an ownership change lands through
+            # _apply_group_assignment before ranges are computed
+            self.group_member.maintain()
         t_pump = time.perf_counter()
         if self._sources:
             self._pump_sources()
@@ -426,12 +511,30 @@ class StreamingContext:
             with _stage(rec, "checkpoint"):
                 self._progress.save(self.checkpoint_path)
         # Progress is also pushed broker-side so producers in other processes
-        # (RemoteBroker -> BrokerServer) can bound their lag against it.
+        # (RemoteBroker -> BrokerServer) can bound their lag against it. In
+        # group mode the commit carries (group, consumer, generation): a
+        # fenced commit means the group rebalanced away from us mid-batch —
+        # local progress stands (the new owner replays from its own start
+        # offset; idempotent sinks absorb the overlap) and the member
+        # resyncs at the top of the next batch.
         broker_commit = getattr(self.broker, "commit", None)
         if broker_commit is not None:
             with _stage(rec, "broker_commit"):
-                for r in ranges:
-                    broker_commit(r.topic, r.partition, r.until)
+                member = self.group_member
+                if member is None:
+                    for r in ranges:
+                        broker_commit(r.topic, r.partition, r.until)
+                else:
+                    from repro.data.groups import GroupError
+                    try:
+                        for r in ranges:
+                            broker_commit(r.topic, r.partition, r.until,
+                                          group=member.group,
+                                          consumer=member.consumer_id,
+                                          generation=member.generation)
+                    except GroupError as e:
+                        log.warning("group commit fenced (%s); resyncing", e)
+                        member.request_resync()
 
     def checkpoint_now(self) -> None:
         """Checkpoint current progress + window state outside the batch loop
@@ -505,6 +608,9 @@ class StreamingContext:
             if self._delivery is not None:
                 self._delivery.close(drain=drain)
         finally:
+            if self.group_member is not None:
+                self.group_member.leave()
+                self.group_member = None
             for _, windower in self._window_states:
                 store = getattr(windower, "store", None)
                 if store is not None:

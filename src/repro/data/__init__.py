@@ -33,6 +33,14 @@ Class                             Reproduces
                                   .delivery.SinkPolicy` (retry / skip /
                                   dead-letter topic / fail-pipeline,
                                   timeout, queue block-or-drop)
+``groups.GroupCoordinator``       Kafka group coordinator: broker-hosted
+                                  membership, heartbeat liveness,
+                                  generation-fenced commits, sticky
+                                  partition assignment
+``groups.GroupConsumer``          Kafka consumer-group member: consumes only
+                                  assigned partitions, hands open-window
+                                  state to the next owner through
+                                  per-partition durable checkpoints
 ``transport.BrokerServer``        Kafka broker process: serves partition logs
                                   over TCP / Unix sockets to other processes
 ``transport.RemoteBroker``        Kafka client / paper's ZeroMQ direction:
@@ -63,6 +71,9 @@ from repro.data.delivery import (DeliveryFailed, DeliveryRuntime, LaneMetrics,
                                  SinkLane, SinkPolicy, SinkTimeoutError)
 from repro.data.durable_log import (DurableLogFactory, DurablePartitionLog,
                                     LogCorruptionError)
+from repro.data.groups import (GroupConsumer, GroupCoordinator, GroupError,
+                               GroupMember, StaleGenerationError,
+                               sticky_assign)
 from repro.data.ingest import (IngestConfig, IngestRunner, SourceMetrics,
                                ingest_all)
 from repro.data.metrics import (BatchSpan, Counter, Gauge, Histogram,
@@ -98,6 +109,8 @@ __all__ = [
     "DeliveryFailed", "SinkTimeoutError",
     "BrokerServer", "RemoteBroker", "serve_broker", "parse_address",
     "TransportError", "FrameError",
+    "GroupCoordinator", "GroupMember", "GroupConsumer", "sticky_assign",
+    "GroupError", "StaleGenerationError",
     "DurablePartitionLog", "DurableLogFactory", "LogCorruptionError",
     "MetricsRegistry", "Counter", "Gauge", "Histogram", "NullRegistry",
     "get_registry", "set_registry", "disabled",

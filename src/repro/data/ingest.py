@@ -69,6 +69,12 @@ class IngestConfig:
     flush_records: int = 64        # flush when this many records buffered
     flush_bytes: int = 1 << 20     # ... or the buffered payload estimate hits
     flush_interval: float = 0.02   # ... or the oldest buffered record ages out
+    # When the topic is consumed by a consumer group (repro.data.groups),
+    # name it here: backpressure then measures lag against the *group's*
+    # broker-committed offsets (group members never advance the default
+    # group's offsets, so the runner's usual lag signal would read the
+    # whole log as unconsumed and block forever).
+    consumer_group: str = ""
 
     def __post_init__(self) -> None:
         if self.policy not in POLICIES:
@@ -204,18 +210,26 @@ class IngestRunner:
             labels=labels, buckets=COUNT_BUCKETS)
         reg.gauge("ingest_lag", help="produced-but-unconsumed records",
                   labels=labels,
-                  callback=lambda t=topic: self._lag_of(t))
+                  callback=lambda e=e: self._lag(e))
 
     @property
     def metrics(self) -> list[SourceMetrics]:
         return [e.metrics for e in self._entries]
 
+    def _lag(self, e: _Entry) -> int:
+        """The entry's backpressure signal: the consumer group's broker-side
+        committed offsets when ``config.consumer_group`` names one, else the
+        runner-level ``lag_of``/consumer."""
+        if e.config.consumer_group:
+            return self.broker.lag(e.config.topic,
+                                   group=e.config.consumer_group)
+        return self._lag_of(e.config.topic)
+
     def lag_snapshot(self) -> dict[str, int]:
         """Current produced-but-unconsumed lag per topic — the live signal
         (``max_observed_lag`` is a high-water mark and never drains) that
         :class:`~repro.core.fault.LagPolicy` scales the worker set on."""
-        return {e.config.topic: self._lag_of(e.config.topic)
-                for e in self._entries}
+        return {e.config.topic: self._lag(e) for e in self._entries}
 
     @property
     def done(self) -> bool:
@@ -295,7 +309,7 @@ class IngestRunner:
             want = min(want, max(0, due - m.produced - len(e.buf)))
             if want == 0:
                 return 0
-        lag = self._lag_of(cfg.topic)
+        lag = self._lag(e)
         m.max_observed_lag = max(m.max_observed_lag, lag)
         # records buffered for the next flush are already claimed pipeline
         # room: count them, or batching would overshoot max_pending

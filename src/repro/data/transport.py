@@ -321,8 +321,10 @@ def _make_socket(address: Any) -> socket.socket:
 # "ping" and "stats" are served by the transport itself, not the broker.
 _OPS = frozenset({
     "create_topic", "topics", "num_partitions", "produce", "produce_many",
-    "read", "end_offset", "end_offsets", "commit", "committed", "lag", "ping",
-    "stats",
+    "read", "end_offset", "end_offsets", "commit", "committed",
+    "commit_groups", "lag", "ping", "stats",
+    # consumer-group protocol (repro.data.groups), hosted by the broker
+    "join_group", "heartbeat", "sync_group", "leave_group", "describe_group",
 })
 
 
@@ -658,14 +660,39 @@ class RemoteBroker:
     def end_offsets(self, topic: str) -> list[int]:
         return self._request("end_offsets", topic)
 
-    def commit(self, topic: str, partition: int, offset: int) -> None:
-        self._request("commit", topic, partition, offset)
+    def commit(self, topic: str, partition: int, offset: int,
+               group: str = "", consumer: str | None = None,
+               generation: int | None = None) -> None:
+        self._request("commit", topic, partition, offset, group=group,
+                      consumer=consumer, generation=generation)
 
-    def committed(self, topic: str) -> list[int]:
-        return self._request("committed", topic)
+    def committed(self, topic: str, group: str = "") -> list[int]:
+        return self._request("committed", topic, group=group)
 
-    def lag(self, topic: str) -> int:
-        return self._request("lag", topic)
+    def commit_groups(self, topic: str) -> list[str]:
+        return self._request("commit_groups", topic)
+
+    def lag(self, topic: str, group: str = "") -> int:
+        return self._request("lag", topic, group=group)
+
+    # -- consumer groups (repro.data.groups; errors arrive as GroupError /
+    # StaleGenerationError — groups.py registers them in _ERR_TYPES) -------
+    def join_group(self, group: str, consumer: str, topics,
+                   session_timeout: float = 5.0) -> dict:
+        return self._request("join_group", group, consumer, list(topics),
+                             session_timeout=session_timeout)
+
+    def heartbeat(self, group: str, consumer: str, generation: int) -> dict:
+        return self._request("heartbeat", group, consumer, generation)
+
+    def sync_group(self, group: str, consumer: str, generation: int) -> dict:
+        return self._request("sync_group", group, consumer, generation)
+
+    def leave_group(self, group: str, consumer: str) -> None:
+        self._request("leave_group", group, consumer)
+
+    def describe_group(self, group: str) -> dict:
+        return self._request("describe_group", group)
 
 
 def parse_address(spec: str) -> Any:

@@ -192,7 +192,8 @@ def test_partition_growth_between_batches_is_picked_up():
     sc.foreach_batch(lambda rdd, info: seen.extend(rdd.collect()))
     sc.run_one_batch()
     b._topics["t"].append(type(b._topics["t"][0])())   # grow the topic
-    b._committed["t"].append(0)
+    for done in b._committed["t"].values():            # pad every group
+        done.append(0)
     b.produce("t", 1, partition=1)
     sc.run_one_batch()
     assert sorted(seen) == [0, 1]

@@ -142,6 +142,28 @@ def test_commit_monotonic_and_lag(anybroker):
     assert anybroker.committed("t") == [5, 4]
 
 
+def test_per_group_commit_isolation(anybroker):
+    """Consumer groups commit and lag independently: two groups walk the
+    same topic at their own pace, neither touches the default group's
+    offsets, and the group enumeration crosses every backend intact."""
+    anybroker.create_topic("t", 2)
+    anybroker.produce_many("t", [(None, i) for i in range(6)], partition=0)
+    anybroker.produce_many("t", [(None, i) for i in range(4)], partition=1)
+    anybroker.commit("t", 0, 5, group="g1")
+    anybroker.commit("t", 1, 2, group="g2")
+    assert anybroker.committed("t", group="g1") == [5, 0]
+    assert anybroker.committed("t", group="g2") == [0, 2]
+    assert anybroker.committed("t") == [0, 0]      # default group untouched
+    assert anybroker.lag("t", group="g1") == 5
+    assert anybroker.lag("t", group="g2") == 8
+    assert anybroker.lag("t") == 10
+    assert sorted(anybroker.commit_groups("t")) == ["", "g1", "g2"]
+    anybroker.commit("t", 0, 3, group="g1")        # replay never rewinds
+    assert anybroker.committed("t", group="g1") == [5, 0]
+    with pytest.raises(ValueError):
+        anybroker.commit("t", 0, 99, group="g1")   # past the end
+
+
 def test_numpy_payloads_roundtrip_writable(anybroker):
     """Detector-style records: ndarray values survive every backend (array
     frames over the socket, raw segment bytes on disk) and come back
