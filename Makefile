@@ -5,7 +5,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-data test-delivery test-state test-transport test-obs test-groups bench bench-check examples deps-check
+.PHONY: test test-data test-delivery test-state test-transport test-obs test-groups test-replication bench bench-check examples deps-check
 
 test:           ## tier-1: full suite, stop at first failure
 	$(PYTHON) -m pytest -x -q
@@ -33,16 +33,21 @@ test-obs:       ## telemetry: metrics registry, trace spans, observability endpo
 test-groups:    ## consumer groups: assignor properties, fencing, partition-handoff chaos suite
 	$(PYTHON) -m pytest -q tests/test_groups.py tests/test_broker_parity.py
 
+test-replication: ## broker HA: follower replication, failover promotion, epoch fencing
+	$(PYTHON) -m pytest -q tests/test_replication.py tests/test_broker_parity.py \
+	    tests/test_durable_log.py
+
 bench:          ## CSV benchmark sweep (includes bench_ingest)
 	$(PYTHON) -m benchmarks.run
 
-bench-check:    ## guards: produce_many >= 3x per-record, fan-out >= 2x serial, durable window state <= 1.3x in-memory, metrics registry <= 1.1x registry-off
+bench-check:    ## guards: produce_many >= 3x per-record, fan-out >= 2x serial, durable window state <= 1.3x in-memory, metrics registry <= 1.1x registry-off, replicated produce <= 1.3x unreplicated
 	$(PYTHON) -m benchmarks.run --check
 
 examples:       ## fast end-to-end example runs
 	$(PYTHON) examples/ptycho_pipeline.py --fast
 	$(PYTHON) examples/tomo_pipeline.py --nray 32 --nslice 16
 	$(PYTHON) examples/remote_ingest.py --frames 48
+	$(PYTHON) examples/ha_failover.py --batches 40
 
 deps-check:     ## verify runtime imports resolve (no installs) + docs links
 	$(PYTHON) -c "import jax, numpy, scipy; print('runtime deps ok')"

@@ -16,10 +16,12 @@ parallel delivery runtime (``ingest/fanout_parallel``) must beat serial
 the fan, the durable window state store (``ingest/window_restore``)
 must cost <= 1.3x the in-memory store per windowed batch, the metrics
 registry (``ingest/obs_overhead``) must tax the instrumented ingest hot
-path by <= 1.1x the registry-off run, and four group consumers
+path by <= 1.1x the registry-off run, four group consumers
 (``ingest/group_scaleout``) must drain a 4-partition topic at >= 2x the
-single-consumer rate (exit 1 on regression; ``make bench-check`` wires it
-into CI).
+single-consumer rate, and a live broker replica
+(``ingest/replication_overhead``) must tax the durable produce path by
+<= 1.3x the unreplicated run (exit 1 on regression; ``make bench-check``
+wires it into CI).
 """
 from __future__ import annotations
 
@@ -49,6 +51,9 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--check-group-scaleout", type=float, default=2.0,
                     help="minimum 4-consumer/1-consumer group drain "
                          "throughput ratio for --check (default 2.0)")
+    ap.add_argument("--check-replication-overhead", type=float, default=1.3,
+                    help="maximum replicated/unreplicated durable produce "
+                         "wall-clock ratio for --check (default 1.3)")
     args = ap.parse_args(argv)
 
     print("name,us_per_call,derived")
@@ -59,7 +64,8 @@ def main(argv: list[str] | None = None) -> int:
             min_fanout_ratio=args.check_fanout_ratio,
             max_window_overhead=args.check_window_overhead,
             max_obs_overhead=args.check_obs_overhead,
-            min_group_scaleout=args.check_group_scaleout) else 1
+            min_group_scaleout=args.check_group_scaleout,
+            max_replication_overhead=args.check_replication_overhead) else 1
 
     from benchmarks import (bench_allreduce, bench_ingest, bench_ptycho,
                             bench_streaming, bench_tomo)

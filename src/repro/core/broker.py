@@ -51,6 +51,25 @@ from repro.core.rdd import RDD, Context
 # (and the broker's own lag gauge) land on this default group.
 DEFAULT_GROUP = ""
 
+# Broker-side record of group/committed-offset advances, appended to this
+# topic when Broker(commit_topic=...) is set. With a durable log factory the
+# topic replicates to followers like any other, which is how a promoted
+# follower rebuilds per-group committed offsets and the coordinator's
+# generation floor (see repro.data.replication and Broker.restore_commits).
+COMMIT_TOPIC = "__commits"
+
+
+class BrokerFencedError(RuntimeError):
+    """This broker was fenced by a higher-epoch promotion: a follower took
+    over while it was away, and accepting writes now would fork the log. A
+    zombie primary raises this on every produce/commit after a returning
+    client fences it (``Broker.fence``)."""
+
+
+class NotPrimaryError(RuntimeError):
+    """This broker is a replica (read-only follower): writes must go to the
+    primary until ``Broker.promote`` makes this one the primary."""
+
 
 @dataclass(frozen=True)
 class Record:
@@ -148,8 +167,9 @@ class Broker:
     stable on-disk directories that survive a broker restart.
     """
 
-    def __init__(self, log_factory: Callable[..., PartitionLog] | None = None
-                 ) -> None:
+    def __init__(self, log_factory: Callable[..., PartitionLog] | None = None,
+                 commit_topic: str | None = None, writable: bool = True,
+                 epoch: int = 0) -> None:
         self._log_factory: Callable[..., PartitionLog] = (
             log_factory or InMemoryPartitionLog)
         self._locate_logs = _factory_wants_location(self._log_factory)
@@ -159,6 +179,19 @@ class Broker:
         self._lock = threading.Lock()
         self._coordinator: Any = None
         self._coord_lock = threading.Lock()
+        # -- HA role state (repro.data.replication) ------------------------
+        # epoch is the fencing token: each failover promotes at a strictly
+        # higher epoch, and a broker fenced by a higher epoch refuses writes.
+        self.epoch = epoch
+        self.writable = writable           # False = replica until promoted
+        self._fenced_by: int | None = None
+        self.commit_topic = commit_topic
+        self._commit_replay = False        # True while restore_commits runs
+        # replica_id -> {topic: [per-partition replicated high-watermarks]}
+        self._replica_hwms: dict[str, dict[str, list[int]]] = {}
+        # runs after a successful promote (e.g. ReplicaFollower persisting
+        # the new epoch) — called outside the lock, with the broker
+        self.on_promote: Callable[["Broker"], None] | None = None
         # constructor-time import: repro.data.metrics pulls in the data
         # package, which imports this module — at construction the cycle is
         # long resolved. Instruments are cached per topic (one dict lookup
@@ -211,9 +244,214 @@ class Broker:
                 raise KeyError(f"unknown topic {topic!r}")
             return self._topics[topic]
 
+    # -- HA role ----------------------------------------------------------
+    def _require_writable(self) -> None:
+        if self._fenced_by is not None:
+            raise BrokerFencedError(
+                f"broker fenced by epoch {self._fenced_by} (own epoch "
+                f"{self.epoch}): a promoted follower owns the log now")
+        if not self.writable:
+            raise NotPrimaryError(
+                f"broker is a replica at epoch {self.epoch}; "
+                "produce/commit must go to the primary")
+
+    def broker_epoch(self) -> dict:
+        """The fencing state clients probe before trusting a broker."""
+        return {"epoch": self.epoch,
+                "writable": self.writable and self._fenced_by is None}
+
+    def fence(self, epoch: int) -> dict:
+        """Fence this broker out of the write path: a failover promoted a
+        follower at ``epoch``, so any write accepted here would fork the
+        log. Requires a *strictly higher* epoch — a stale fencing attempt
+        (epoch <= ours) is itself rejected."""
+        if epoch <= self.epoch:
+            raise ValueError(
+                f"fence epoch {epoch} is not newer than broker epoch "
+                f"{self.epoch}")
+        with self._lock:
+            if self._fenced_by is None or epoch > self._fenced_by:
+                self._fenced_by = epoch
+        return self.broker_epoch()
+
+    def promote(self, epoch: int) -> dict:
+        """Promote this (replica) broker to primary at ``epoch``.
+
+        Idempotent across racing clients: the first caller at a new epoch
+        performs the promotion (un-fence + rebuild group/committed offsets
+        from the replicated commit topic); later callers at the same or an
+        older epoch get the current state back with ``promoted=False``. A
+        promotion epoch must be strictly higher than the epoch this broker
+        last *followed or served* at, so a zombie primary can never promote
+        itself back over the new one."""
+        with self._lock:
+            if self.writable and self._fenced_by is None \
+                    and self.epoch >= epoch:
+                return {"epoch": self.epoch, "promoted": False,
+                        "writable": True}
+            # the fence epoch is a floor too: a broker fenced at N knows a
+            # promotion at N happened elsewhere, so re-entering at <= N
+            # would put two primaries at the same epoch
+            floor = max(self.epoch, self._fenced_by or 0)
+            if epoch <= floor:
+                raise ValueError(
+                    f"promote epoch {epoch} is not newer than broker epoch "
+                    f"{floor}")
+            self.epoch = epoch
+            self.writable = True
+            self._fenced_by = None
+        self.restore_commits()
+        if self.on_promote is not None:
+            self.on_promote(self)
+        return {"epoch": epoch, "promoted": True, "writable": True}
+
+    def fetch_frames(self, topic: str, partition: int, start: int,
+                     max_bytes: int = 4 * 1024 * 1024
+                     ) -> tuple[bytes, list[int], int, int]:
+        """Replication pull: raw CRC frames for ``[start, end)`` of one
+        partition as one contiguous blob plus per-frame sizes, capped at
+        ``max_bytes`` per call. Returns ``(blob, lengths, next_offset,
+        end_offset)``. Durable logs serve their segment bytes verbatim
+        (:meth:`~repro.data.durable_log.DurablePartitionLog.read_frames`);
+        in-memory logs frame records on the fly, so every backend is
+        replicable. The follower CRC-verifies every frame before it appends
+        — the primary ships bytes, it does not re-check them."""
+        plog = self._topic(topic)[partition]
+        end = plog.end_offset()
+        reader = getattr(plog, "read_frames", None)
+        if reader is not None:
+            blob, lengths, nxt = reader(start, end, max_bytes=max_bytes)
+            return blob, lengths, nxt, end
+        from repro.data.durable_log import frame_bytes
+        from repro.data.transport import encode_message
+        frames, total, nxt = [], 0, max(start, 0)
+        for rec in plog.read(start, end):
+            frame = frame_bytes(b"".join(
+                encode_message((rec.key, rec.value, rec.timestamp))))
+            if frames and total + len(frame) > max_bytes:
+                break
+            frames.append(frame)
+            total += len(frame)
+            nxt += 1
+        return b"".join(frames), [len(f) for f in frames], nxt, end
+
+    def replica_sync(self, replica_id: str, cursors: dict,
+                     max_bytes: int = 4 * 1024 * 1024) -> dict:
+        """One whole replication round in one round trip — a chatty
+        follower polling ``topics`` + per-partition :meth:`fetch_frames` +
+        :meth:`replica_hwm` every few milliseconds measurably taxes the
+        produce hot path it shares the broker with (see
+        ``bench_ingest:replication_overhead``); this op folds the round
+        into a single request. ``cursors`` is the follower's ``{topic:
+        [next_offset per partition]}`` — it doubles as the high-watermark
+        report (what the follower has IS what is safely replicated).
+        Returns ``{"topics": {topic: n_partitions}, "parts": {topic:
+        [(blob, lengths, next_offset, end_offset), ...]}}``; topics the
+        follower has no cursor for yet are served from offset 0 so it can
+        mirror and append in the same round. ``max_bytes`` caps the total
+        payload across all partitions — the remainder comes next round."""
+        self.replica_hwm(replica_id, cursors)
+        topics: dict[str, int] = {}
+        parts: dict[str, list] = {}
+        remaining = int(max_bytes)
+        for topic in self.topics():
+            plogs = self._topic(topic)
+            topics[topic] = len(plogs)
+            starts = cursors.get(topic) or []
+            entries = []
+            for p, plog in enumerate(plogs):
+                start = int(starts[p]) if p < len(starts) else 0
+                end = plog.end_offset()
+                if remaining > 0 and start < end:
+                    blob, lengths, nxt, end = self.fetch_frames(
+                        topic, p, start, max_bytes=remaining)
+                    remaining -= len(blob)
+                else:
+                    blob, lengths, nxt = b"", [], start
+                entries.append((blob, lengths, nxt, end))
+            parts[topic] = entries
+        return {"topics": topics, "parts": parts}
+
+    def replica_hwm(self, replica_id: str | None = None,
+                    hwms: dict | None = None) -> dict:
+        """Follower-reported replicated high-watermarks.
+
+        A follower calls this with its ``replica_id`` and a ``{topic:
+        [per-partition next offsets]}`` map after each pull round; anyone
+        (monitoring, a :class:`~repro.data.replication.FailoverBroker`
+        confirming its resend window) calls it bare to read the full
+        ``{replica_id: {topic: [hwm]}}`` map back."""
+        with self._lock:
+            if replica_id is not None and hwms is not None:
+                self._replica_hwms[str(replica_id)] = {
+                    str(t): [int(o) for o in offs]
+                    for t, offs in hwms.items()}
+            return {r: {t: list(offs) for t, offs in m.items()}
+                    for r, m in self._replica_hwms.items()}
+
+    def _record_group_event(self, event: tuple) -> None:
+        """Append one commit/generation event to the durable commit topic
+        (when configured) so group progress survives a failover. Never on
+        the replay path, and never for the commit topic itself."""
+        if self.commit_topic is None or self._commit_replay:
+            return
+        with self._lock:
+            missing = self.commit_topic not in self._topics
+        if missing:
+            self.create_topic(self.commit_topic, 1)
+        logs = self._topic(self.commit_topic)
+        logs[0].append(None, event, 0.0)
+        self._m_produce[self.commit_topic].inc()
+
+    def restore_commits(self) -> int:
+        """Replay the commit topic into per-group committed offsets and the
+        coordinator's generation floor — the restart/promotion path (data
+        topics themselves are restored by ``DurableLogFactory.restore``).
+        Offsets are clamped to the local log end: replication of the data
+        may trail replication of the commit record, and a committed offset
+        pointing past the log would wedge every reader. Returns the number
+        of events applied."""
+        if self.commit_topic is None:
+            return 0
+        with self._lock:
+            if self.commit_topic not in self._topics:
+                return 0
+        plog = self._topic(self.commit_topic)[0]
+        applied = 0
+        self._commit_replay = True
+        try:
+            for rec in plog.read(0, plog.end_offset()):
+                event = tuple(rec.value)
+                if event[0] == "commit":
+                    _, group, topic, partition, offset = event
+                    try:
+                        logs = self._topic(topic)
+                    except KeyError:
+                        continue           # data topic not replicated (yet)
+                    if not 0 <= int(partition) < len(logs):
+                        continue
+                    offset = min(int(offset),
+                                 logs[int(partition)].end_offset())
+                    with self._lock:
+                        done = self._committed[topic].setdefault(
+                            str(group), [0] * len(logs))
+                        if len(done) < len(logs):
+                            done.extend([0] * (len(logs) - len(done)))
+                        done[int(partition)] = max(done[int(partition)],
+                                                   offset)
+                elif event[0] == "gen":
+                    _, group, generation = event
+                    self.coordinator.seed_generation(str(group),
+                                                     int(generation))
+                applied += 1
+        finally:
+            self._commit_replay = False
+        return applied
+
     # -- producer ---------------------------------------------------------
     def produce(self, topic: str, value: Any, key: bytes | None = None,
                 partition: int | None = None, timestamp: float = 0.0) -> int:
+        self._require_writable()
         logs = self._topic(topic)
         if partition is None:
             partition = _route_partition(key, len(logs))
@@ -237,6 +475,7 @@ class Broker:
         ``append_many`` (the durable log) get the whole batch in one call —
         one disk write + fsync instead of one per record.
         """
+        self._require_writable()
         logs = self._topic(topic)
         if partition is not None and not 0 <= partition < len(logs):
             raise ValueError(
@@ -297,6 +536,7 @@ class Broker:
         # Network-facing via the transport: a bad partition (negative Python
         # indexing!) or an offset past the log end must not poison the lag
         # signal backpressure runs on.
+        self._require_writable()
         logs = self._topic(topic)               # raise on unknown topic
         if not 0 <= partition < len(logs):
             raise ValueError(
@@ -319,7 +559,14 @@ class Broker:
             done = self._committed[topic].setdefault(group, [0] * len(logs))
             if len(done) < len(logs):
                 done.extend([0] * (len(logs) - len(done)))
+            advanced = offset > done[partition]
             done[partition] = max(done[partition], offset)
+        if advanced and topic != self.commit_topic:
+            # durable (and hence replicated) record of the advance: one
+            # append per committing micro-batch, the price of group progress
+            # surviving a broker failover (see restore_commits)
+            self._record_group_event(("commit", group, topic, partition,
+                                      offset))
 
     def committed(self, topic: str, group: str = DEFAULT_GROUP) -> list[int]:
         logs = self._topic(topic)
@@ -356,6 +603,9 @@ class Broker:
 
     def join_group(self, group: str, consumer: str, topics: Sequence[str],
                    session_timeout: float = 5.0) -> dict:
+        # group membership is primary-side state: joining a fenced zombie or
+        # an unpromoted replica would split the group across brokers
+        self._require_writable()
         return self.coordinator.join_group(group, consumer, topics,
                                            session_timeout=session_timeout)
 

@@ -138,6 +138,10 @@ class StreamingContext:
         # per-topic produce round-robin cursor — persists across batches, so
         # short polls don't restart at partition 0 every batch
         self._rr: dict[str, int] = {}
+        # HA: a FailoverBroker bumps .failovers when it promotes a new
+        # primary; the new primary's log may be shorter than our cursor
+        # (async replication lost the tail), so the cursor must be rebased
+        self._last_failovers = getattr(broker, "failovers", 0)
         # windowers whose state rides this context's commit protocol
         self._window_states: list[tuple[str, Any]] = []
         # consumer-group mode (join_group): when set, only assigned
@@ -421,8 +425,31 @@ class StreamingContext:
                 rr += 1
             self._rr[topic] = rr
 
+    def _rebase_after_failover(self) -> None:
+        """Clamp start offsets to the new primary's log ends after a broker
+        failover. Replication is asynchronous: the promoted follower may be
+        missing a tail this consumer already read, and a start offset past
+        the log end would silently skip every record the new primary appends
+        below it. Clamping replays the gap instead — duplicates the
+        idempotent-by-key sinks absorb (``docs/replication.md``)."""
+        for topic in self._topics:
+            ends = self.broker.end_offsets(topic)
+            starts = self._padded_offsets(topic, parts=len(ends))
+            for p, end in enumerate(ends):
+                if starts[p] > end:
+                    log.warning(
+                        "failover rebase: %s[%d] cursor %d is past the new "
+                        "primary's end %d; rewinding (replayed records are "
+                        "absorbed by idempotent sinks)",
+                        topic, p, starts[p], end)
+                    starts[p] = end
+
     def run_one_batch(self) -> BatchInfo | None:
         """Paper Fig. 8 ``run_batch``: per-topic RDDs, union, process."""
+        failovers = getattr(self.broker, "failovers", 0)
+        if failovers != self._last_failovers:
+            self._last_failovers = failovers
+            self._rebase_after_failover()
         if self.group_member is not None:
             # heartbeat / rejoin as due; an ownership change lands through
             # _apply_group_assignment before ranges are computed

@@ -48,6 +48,12 @@ Class                             Reproduces
 ``durable_log.DurablePartitionLog``  Kafka's on-disk log segments: records
                                   survive a broker restart, torn tails are
                                   truncated by the recovery scan
+``replication.ReplicaFollower``   Kafka follower replica: pulls the
+                                  leader's segment frames byte-for-byte,
+                                  promotable on leader death
+``replication.FailoverBroker``    Kafka client leader failover: epoch
+                                  fencing plus an unreplicated-batch resend
+                                  window, so no committed record is lost
 ``state.DurableStateStore``       Flink-style window state backend: the open
                                   window spilled to disk (snapshot + delta
                                   frames), committed atomically with the
@@ -82,6 +88,7 @@ from repro.data.metrics import (BatchSpan, Counter, Gauge, Histogram,
                                 set_registry)
 from repro.data.obs_server import (ObservabilityServer, lag_health,
                                    serve_observability)
+from repro.data.replication import FailoverBroker, ReplicaFollower
 from repro.data.sinks import (CallbackSink, KeyedSink, MetricsSink,
                               NpzDirectorySink, Sink, TopicSink,
                               describe_result_items, fan_out)
@@ -112,6 +119,7 @@ __all__ = [
     "GroupCoordinator", "GroupMember", "GroupConsumer", "sticky_assign",
     "GroupError", "StaleGenerationError",
     "DurablePartitionLog", "DurableLogFactory", "LogCorruptionError",
+    "ReplicaFollower", "FailoverBroker",
     "MetricsRegistry", "Counter", "Gauge", "Histogram", "NullRegistry",
     "get_registry", "set_registry", "disabled",
     "TraceLog", "BatchSpan", "SPAN_STAGES",

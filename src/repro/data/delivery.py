@@ -382,14 +382,16 @@ class SinkLane:
                 self._queue.put_nowait(_CLOSE)
                 break
             except queue.Full:
-                if deadline and time.monotonic() > deadline:
+                # `is not None`: close(timeout=0) means "try once, abandon
+                # immediately" — a falsy deadline must not disable the bound
+                if deadline is not None and time.monotonic() > deadline:
                     self.metrics.leaked_thread = True
                     log.warning("sink lane %s: queue still full after %ss; "
                                 "abandoning worker", self.name, timeout)
                     return
                 time.sleep(0.002)
         self.thread.join(timeout=(max(0.0, deadline - time.monotonic())
-                                  if deadline else None))
+                                  if deadline is not None else None))
         if self.thread.is_alive():
             self.metrics.leaked_thread = True
             log.warning("sink lane %s: worker did not exit in %ss",

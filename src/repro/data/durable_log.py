@@ -37,6 +37,21 @@ log-recovery behavior for unflushed segments.
 - ``"never"``    — leave flushing to the OS (process crashes still lose
   nothing: writes are unbuffered, only power loss is exposed).
 
+Directory durability is part of the same contract: creating a new segment
+file (a roll) and renaming one aside (``*.orphan`` during recovery) are
+*directory* mutations, and a power loss after the data fsync but before the
+directory entry reaches disk could resurrect an orphaned segment or lose a
+freshly rolled one. Under ``fsync="always"``/``"interval"`` the partition
+directory fd is therefore fsynced after every segment create/rename;
+``"never"`` skips it, consistent with that policy's power-loss exposure.
+
+The CRC frame format doubles as the **replication wire format**: a follower
+(:class:`~repro.data.replication.ReplicaFollower`) pulls committed frames
+with :meth:`DurablePartitionLog.read_frames` — raw header+payload bytes,
+verbatim — re-verifies each CRC on its side of the socket and appends them
+byte-identical with :meth:`DurablePartitionLog.append_frames`. Offsets stay
+dense and equal on both logs by construction.
+
 :class:`DurableLogFactory` adapts this to ``Broker(log_factory=...)``: the
 broker passes ``(topic, partition)`` to factories that accept them, and the
 factory maps each onto a stable directory under its root — so a restarted
@@ -127,7 +142,7 @@ class DurablePartitionLog:
         self._lock = threading.RLock()
         # offset -> (segment id, byte position, payload length)
         self._index: list[tuple[int, int, int]] = []
-        self._readers: dict[int, Any] = {}
+        self._readers: dict[int, int] = {}   # segment id -> read fd
         self._writer: Any = None
         self._active_seg = 0
         self._active_size = 0
@@ -142,21 +157,55 @@ class DurablePartitionLog:
     def _seg_path(self, seg_id: int) -> str:
         return os.path.join(self.path, f"{seg_id:08d}{_SEGMENT_SUFFIX}")
 
-    def _reader(self, seg_id: int):
-        f = self._readers.get(seg_id)
-        if f is None:
-            f = open(self._seg_path(seg_id), "rb")
-            self._readers[seg_id] = f
-        return f
+    def _reader_fd(self, seg_id: int) -> int:
+        with self._lock:
+            fd = self._readers.get(seg_id)
+            if fd is None:
+                fd = os.open(self._seg_path(seg_id), os.O_RDONLY)
+                self._readers[seg_id] = fd
+            return fd
+
+    def _pread(self, fd: int, nbytes: int, pos: int) -> bytearray:
+        """Positionless read into a fresh *writable* buffer (zero-copy array
+        decode needs mutability). ``pread`` carries its own offset, so
+        concurrent readers never race a shared file position — and never
+        need the appender lock."""
+        buf = bytearray(nbytes)
+        view = memoryview(buf)
+        done = 0
+        while done < nbytes:
+            got = os.preadv(fd, [view[done:]], pos + done)
+            if got <= 0:
+                raise LogCorruptionError(
+                    f"{self.path}: short read at pos {pos} "
+                    f"({done}/{nbytes} bytes)")
+            done += got
+        return buf
+
+    def _fsync_dir(self) -> None:
+        """Flush the partition *directory* entry (segment create/rename) —
+        without it a power loss can undo the rename/creation even though the
+        file contents were fsynced. Skipped under ``fsync="never"``."""
+        if self.fsync == "never":
+            return
+        fd = os.open(self.path, os.O_RDONLY)
+        try:
+            os.fsync(fd)
+        finally:
+            os.close(fd)
 
     def _open_writer(self, seg_id: int) -> None:
         if self._writer is not None:
             self._writer.close()
+        path = self._seg_path(seg_id)
+        created = not os.path.exists(path)
         # unbuffered: every append is a real write(2), so a killed process
         # loses at most the frame being written, never a buffered batch
-        self._writer = open(self._seg_path(seg_id), "ab", buffering=0)
+        self._writer = open(path, "ab", buffering=0)
         self._active_seg = seg_id
         self._active_size = self._writer.tell()
+        if created:
+            self._fsync_dir()
 
     # -- recovery ----------------------------------------------------------
     def _recover(self) -> None:
@@ -205,6 +254,7 @@ class DurablePartitionLog:
             n += 1
             dst = f"{src}.orphan{n}"
         os.rename(src, dst)
+        self._fsync_dir()
         self.orphaned_segments += 1
 
     # -- append ------------------------------------------------------------
@@ -258,29 +308,108 @@ class DurablePartitionLog:
             return self._append_frames(frames, [len(f) for f in frames])
 
     # -- read --------------------------------------------------------------
-    def read(self, start: int, until: int) -> list[Record]:
-        out: list[Record] = []
+    def _index_slice(self, start: int,
+                     until: int) -> tuple[int, list[tuple[int, int, int]]]:
+        """Snapshot the index entries for ``[start, min(until, end))`` under
+        the lock. The disk I/O happens *outside* it: a slow or cold-cache
+        reader (a catching-up replication follower is exactly that) must not
+        stall hot-path appends, and committed index entries are immutable —
+        frames are never rewritten in place, only appended after them."""
         with self._lock:
+            begin = max(start, 0)
             end = min(until, len(self._index))
-            for offset in range(max(start, 0), end):
-                seg_id, pos, length = self._index[offset]
-                f = self._reader(seg_id)
-                f.seek(pos)
-                header = f.read(_REC_HEADER.size)
-                if len(header) < _REC_HEADER.size:
-                    raise LogCorruptionError(
-                        f"{self.path}: offset {offset} header unreadable")
-                stored_len, crc = _REC_HEADER.unpack(header)
-                payload = bytearray(length)    # writable: zero-copy arrays
-                if stored_len != length or \
-                        f.readinto(payload) != length or \
-                        zlib.crc32(payload) != crc:
-                    raise LogCorruptionError(
-                        f"{self.path}: offset {offset} failed its CRC "
-                        "(on-disk corruption under a live log)")
-                key, value, ts = decode_message(payload)
-                out.append(Record(key, value, offset, ts))
+            return begin, self._index[begin:end]
+
+    def _frame_at(self, offset: int, seg_id: int, pos: int,
+                  length: int) -> bytearray:
+        """Read + CRC-verify one whole frame (header included) lock-free."""
+        raw = self._pread(self._reader_fd(seg_id),
+                          _REC_HEADER.size + length, pos)
+        stored_len, crc = _REC_HEADER.unpack_from(raw)
+        if stored_len != length or \
+                zlib.crc32(memoryview(raw)[_REC_HEADER.size:]) != crc:
+            raise LogCorruptionError(
+                f"{self.path}: offset {offset} failed its CRC "
+                "(on-disk corruption under a live log)")
+        return raw
+
+    def read(self, start: int, until: int) -> list[Record]:
+        begin, entries = self._index_slice(start, until)
+        out: list[Record] = []
+        for i, (seg_id, pos, length) in enumerate(entries):
+            offset = begin + i
+            raw = self._frame_at(offset, seg_id, pos, length)
+            # slice off the header; the buffer stays writable (zero-copy
+            # arrays decoded over it remain mutable downstream)
+            key, value, ts = decode_message(memoryview(raw)[_REC_HEADER.size:])
+            out.append(Record(key, value, offset, ts))
         return out
+
+    def read_frames(self, start: int, until: int,
+                    max_bytes: int = 4 * 1024 * 1024
+                    ) -> tuple[bytes, list[int], int]:
+        """Replication cursor: byte-exact segment contents for offsets
+        ``[start, min(until, end))`` as one contiguous blob plus the
+        per-frame sizes (header included), capped at ``max_bytes`` per call
+        (at least one frame is always returned when any is available).
+        Returns ``(blob, lengths, next_offset)``. CRCs are *not* checked
+        here: the follower re-verifies every frame before appending
+        (:meth:`append_frames`), so a corrupt byte still cannot enter the
+        replica's offset space, and the primary's serving path stays a
+        handful of preads — no per-frame Python work stealing cycles from
+        concurrent producers."""
+        begin, entries = self._index_slice(start, until)
+        lengths: list[int] = []
+        total = 0
+        for _, _, length in entries:
+            size = _REC_HEADER.size + length
+            if lengths and total + size > max_bytes:
+                break
+            lengths.append(size)
+            total += size
+        entries = entries[:len(lengths)]
+        chunks: list[bytes] = []
+        i = 0
+        while i < len(entries):
+            # frames are append-only, so consecutive index entries in one
+            # segment are physically contiguous: coalesce the whole span
+            # into a single pread instead of one syscall per frame (a
+            # catching-up follower pulls tens of thousands at a time)
+            seg_id, pos, _ = entries[i]
+            j, span = i, 0
+            while j < len(entries) and entries[j][0] == seg_id and \
+                    entries[j][1] == pos + span:
+                span += lengths[j]
+                j += 1
+            chunks.append(self._pread(self._reader_fd(seg_id), span, pos))
+            i = j
+        return b"".join(chunks), lengths, begin + len(entries)
+
+    def append_frames(self, frames: Sequence[bytes]) -> list[int]:
+        """Follower-side replication append: verify and append pre-framed
+        record bytes *verbatim* (no decode/re-encode round trip — the CRC
+        frame is the wire format). A frame whose header or CRC does not hold
+        fails the whole batch before anything is appended: a corrupt frame
+        must never enter the offset space."""
+        checked: list[bytes] = []
+        for frame in frames:
+            frame = bytes(frame)
+            if len(frame) < _REC_HEADER.size:
+                raise ValueError(
+                    f"replicated frame of {len(frame)} bytes is shorter "
+                    "than its header")
+            length, crc = _REC_HEADER.unpack_from(frame)
+            if length != len(frame) - _REC_HEADER.size or \
+                    length > MAX_FRAME_BYTES or \
+                    zlib.crc32(memoryview(frame)[_REC_HEADER.size:]) != crc:
+                raise ValueError(
+                    "replicated frame failed its CRC/length check "
+                    "(corrupted in transit; refusing the batch)")
+            checked.append(frame)
+        if not checked:
+            return []
+        with self._lock:
+            return self._append_frames(checked, [len(f) for f in checked])
 
     def end_offset(self) -> int:
         with self._lock:
@@ -299,8 +428,8 @@ class DurablePartitionLog:
                     os.fsync(self._writer.fileno())
                 self._writer.close()
                 self._writer = None
-            for f in self._readers.values():
-                f.close()
+            for fd in self._readers.values():
+                os.close(fd)
             self._readers.clear()
 
     def __enter__(self) -> "DurablePartitionLog":

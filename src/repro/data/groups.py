@@ -254,7 +254,23 @@ class GroupCoordinator:
         g.m_rebalances.inc()
         log.info("group %r generation %d: %s", g.name, g.generation,
                  {c: a for c, a in new.items()})
+        # durable generation floor: on a broker with a commit topic this
+        # event replicates to followers, so a promoted primary's coordinator
+        # resumes generations *above* every pre-failover one — a zombie
+        # consumer's stale-generation commit stays fenced across failover
+        record = getattr(self.broker, "_record_group_event", None)
+        if record is not None:
+            record(("gen", g.name, g.generation))
         return True
+
+    def seed_generation(self, group: str, generation: int) -> None:
+        """Raise ``group``'s generation floor (promotion/restart path: the
+        replayed commit log names the highest generation the old primary
+        ever handed out; resuming below it would let zombie commits through
+        the generation fence)."""
+        with self._lock:
+            g = self._group(group)
+            g.generation = max(g.generation, int(generation))
 
     def _expire(self, g: _Group, now: float) -> None:
         dead = [c for c, m in g.members.items() if m.deadline <= now]
@@ -695,12 +711,15 @@ class GroupConsumer:
     def run_until(self, done: Callable[[], bool], idle_sleep: float = 0.005,
                   timeout: float | None = None) -> bool:
         """Run batches until ``done()``; False on timeout."""
-        deadline = (time.monotonic() + timeout) if timeout else None
+        # `is not None`, not truthiness: timeout=0 means "deadline already
+        # passed" (check once, give up immediately), never "wait forever"
+        deadline = (time.monotonic() + timeout) if timeout is not None \
+            else None
         while not done():
-            if self.step() is None:
-                time.sleep(idle_sleep)
             if deadline is not None and time.monotonic() > deadline:
                 return False
+            if self.step() is None:
+                time.sleep(idle_sleep)
         return True
 
     @property

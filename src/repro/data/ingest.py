@@ -366,10 +366,13 @@ class IngestRunner:
     # -- drive -------------------------------------------------------------
     def run_inline(self, timeout: float | None = None) -> None:
         """Pump until every source is exhausted (tests/benchmarks)."""
-        deadline = (time.monotonic() + timeout) if timeout else None
+        # `is not None`, not truthiness: timeout=0 must mean "one pass, then
+        # give up immediately", never the accidental "wait forever"
+        deadline = (time.monotonic() + timeout) if timeout is not None \
+            else None
         while not self.done:
             if self.pump() == 0:
-                if deadline and time.monotonic() > deadline:
+                if deadline is not None and time.monotonic() > deadline:
                     log.warning("ingest run_inline timed out; %d sources "
                                 "unfinished",
                                 sum(not e.source.exhausted

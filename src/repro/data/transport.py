@@ -53,7 +53,8 @@ import time
 import zlib
 from typing import Any, Callable
 
-from repro.core.broker import Broker, OffsetRange, Record  # noqa: F401
+from repro.core.broker import (  # noqa: F401
+    Broker, BrokerFencedError, NotPrimaryError, OffsetRange, Record)
 from repro.utils import get_logger
 
 log = get_logger(__name__)
@@ -325,6 +326,10 @@ _OPS = frozenset({
     "commit_groups", "lag", "ping", "stats",
     # consumer-group protocol (repro.data.groups), hosted by the broker
     "join_group", "heartbeat", "sync_group", "leave_group", "describe_group",
+    # replication/HA protocol (repro.data.replication): followers pull raw
+    # record frames and report high-watermarks; clients fence/promote
+    "fetch_frames", "replica_sync", "replica_hwm", "broker_epoch",
+    "promote", "fence",
 })
 
 
@@ -499,6 +504,10 @@ def serve_broker(broker: Broker, address: Any = ("127.0.0.1", 0)
 
 _ERR_TYPES: dict[str, Callable[[str], Exception]] = {
     "KeyError": KeyError, "ValueError": ValueError, "TypeError": TypeError,
+    # HA fencing errors must survive the wire typed: FailoverBroker reacts
+    # to them (fail over / re-point), unlike a generic TransportError
+    "BrokerFencedError": BrokerFencedError,
+    "NotPrimaryError": NotPrimaryError,
 }
 
 
@@ -693,6 +702,39 @@ class RemoteBroker:
 
     def describe_group(self, group: str) -> dict:
         return self._request("describe_group", group)
+
+    # -- replication / HA (repro.data.replication) -------------------------
+    def fetch_frames(self, topic: str, partition: int, start: int,
+                     max_bytes: int = 4 * 1024 * 1024) -> tuple:
+        """Pull committed raw record frames for replication: returns
+        ``(blob, lengths, next_offset, end_offset)`` — one contiguous blob
+        of the durable log's on-disk CRC-framed bytes, shipped verbatim,
+        plus each frame's size within it (docs/replication.md)."""
+        return self._request("fetch_frames", topic, partition, start,
+                             max_bytes=max_bytes)
+
+    def replica_sync(self, replica_id: str, cursors: dict,
+                     max_bytes: int = 4 * 1024 * 1024) -> dict:
+        """One replication round in one round trip: report ``cursors`` as
+        this replica's high-watermarks and pull every partition's tail past
+        them (:meth:`repro.core.broker.Broker.replica_sync`)."""
+        return self._request("replica_sync", replica_id, cursors,
+                             max_bytes=max_bytes)
+
+    def replica_hwm(self, replica_id: str | None = None,
+                    hwms: dict | None = None) -> dict:
+        """Report this replica's per-partition replicated high-watermarks
+        (when ``replica_id``/``hwms`` given) and fetch the full map."""
+        return self._request("replica_hwm", replica_id=replica_id, hwms=hwms)
+
+    def broker_epoch(self) -> dict:
+        return self._request("broker_epoch")
+
+    def promote(self, epoch: int) -> dict:
+        return self._request("promote", epoch)
+
+    def fence(self, epoch: int) -> dict:
+        return self._request("fence", epoch)
 
 
 def parse_address(spec: str) -> Any:

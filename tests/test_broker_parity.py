@@ -1,9 +1,10 @@
 """Broker contract parity matrix.
 
-Every test here runs against four interchangeable broker backends — the
+Every test here runs against five interchangeable broker backends — the
 in-process :class:`Broker`, :class:`RemoteBroker` over TCP and over a Unix
-domain socket, and a :class:`Broker` storing on disk through
-``DurableLogFactory`` — pinning the duck type the rest of the system
+domain socket, a :class:`Broker` storing on disk through
+``DurableLogFactory``, and a replicated primary+follower pair behind
+:class:`FailoverBroker` — pinning the duck type the rest of the system
 (``IngestRunner``, ``StreamingContext``, ``TopicSource``) relies on:
 identical results, identical error types, including ``produce_many``'s
 all-or-nothing validation semantics.
@@ -14,8 +15,9 @@ import pytest
 from repro.core import Broker, OffsetRange
 from repro.data import RemoteBroker, serve_broker
 from repro.data.durable_log import DurableLogFactory
+from repro.data.replication import FailoverBroker, ReplicaFollower
 
-BACKENDS = ("local", "durable", "uds", "tcp")
+BACKENDS = ("local", "durable", "uds", "tcp", "failover")
 
 
 @pytest.fixture(params=BACKENDS)
@@ -25,6 +27,24 @@ def anybroker(request, tmp_path):
         return
     if request.param == "durable":
         yield Broker(log_factory=DurableLogFactory(str(tmp_path / "wal")))
+        return
+    if request.param == "failover":
+        # durable primary + live follower, all calls through the HA client:
+        # replication and the resend window must be invisible to the duck
+        # type (same results, same error types as every other backend)
+        from repro.core.broker import COMMIT_TOPIC
+        backing = Broker(log_factory=DurableLogFactory(str(tmp_path / "p")),
+                         commit_topic=COMMIT_TOPIC)
+        server = serve_broker(backing, str(tmp_path / "p.sock"))
+        follower = ReplicaFollower(server.address, str(tmp_path / "f"),
+                                   poll_interval=0.005)
+        faddr = follower.serve(str(tmp_path / "f.sock"))
+        follower.start()
+        client = FailoverBroker([server.address, faddr])
+        yield client
+        client.close()
+        follower.stop()
+        server.stop()
         return
     backing = Broker()
     address = (str(tmp_path / "b.sock") if request.param == "uds"

@@ -247,3 +247,20 @@ def test_ingest_all_convenience():
     assert [m.produced for m in ms] == [5, 7]
     assert sum(broker.end_offsets("ta")) == 5
     assert sum(broker.end_offsets("tb")) == 7
+
+
+def test_run_inline_zero_timeout_gives_up_immediately():
+    """timeout=0: one pump pass, then give up. A slow source must not turn
+    run_inline into an infinite loop — the deadline is ``is not None``
+    tested, so 0 is a real (already expired) deadline, not "no deadline"."""
+    import time
+
+    broker = Broker()
+    runner = IngestRunner(broker)
+    # first record due in ~10^6 seconds: every pump moves nothing
+    runner.add(SyntheticRateSource(rate=1e-6, total=3),
+               IngestConfig(topic="t"))
+    t0 = time.perf_counter()
+    runner.run_inline(timeout=0)
+    assert time.perf_counter() - t0 < 1.0
+    assert sum(broker.end_offsets("t")) == 0

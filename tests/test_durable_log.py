@@ -293,3 +293,73 @@ def test_sigkill_mid_produce_keeps_committed_prefix(tmp_path):
         assert r.key == str(r.value["i"]).encode()
         assert r.value["pad"] == "x" * 100
         assert r.timestamp == float(r.value["i"])
+
+
+def test_reads_do_not_hold_the_appender_lock_across_disk_io(tmp_path):
+    """read() snapshots the index under the lock but does its segment-file
+    I/O outside it: a reader parked mid-pread must not stall appends (the
+    old implementation held the appender RLock across every disk read)."""
+    import threading
+
+    log = DurablePartitionLog(str(tmp_path / "p0"))
+    for i in range(10):
+        log.append(b"k", i, 0.0)
+    gate, entered = threading.Event(), threading.Event()
+    orig = log._pread
+
+    def parked_pread(fd, nbytes, pos):
+        entered.set()
+        assert gate.wait(10)
+        return orig(fd, nbytes, pos)
+
+    log._pread = parked_pread
+    out = {}
+    reader = threading.Thread(
+        target=lambda: out.setdefault("recs", log.read(0, 10)))
+    reader.start()
+    try:
+        assert entered.wait(10)
+        # the reader is blocked inside its disk read; appends must proceed
+        assert log.append(b"k", 99, 0.0) == 10
+        assert log.append_many([(b"k", 100)], 0.0) == [11]
+        assert log.end_offset() == 12
+    finally:
+        gate.set()
+        reader.join(10)
+    assert [r.value for r in out["recs"]] == list(range(10))
+    log.close()
+
+
+def test_directory_fsync_on_segment_create_and_orphan(tmp_path, monkeypatch):
+    """The power-loss contract (module docstring): a new segment file and a
+    recovery rename are only durable once the *directory* is fsynced, so
+    both paths must fsync the partition dir — and fsync="never" skips it."""
+    calls = []
+    orig = DurablePartitionLog._fsync_dir
+    monkeypatch.setattr(
+        DurablePartitionLog, "_fsync_dir",
+        lambda self: (calls.append(self.fsync), orig(self))[1])
+
+    path = str(tmp_path / "p0")
+    with DurablePartitionLog(path, segment_bytes=256) as log:
+        for i in range(30):
+            log.append(None, f"value-{i:04d}", 0.0)
+    created = len(calls)
+    assert created >= 3                    # one per segment file created
+    # corrupt the first segment: recovery renames later ones to .orphan and
+    # must fsync the directory for each rename
+    segs = _seg_files(path)
+    blob = bytearray(open(segs[0], "rb").read())
+    blob[len(blob) // 2] ^= 0x01
+    with open(segs[0], "wb") as f:
+        f.write(blob)
+    log = DurablePartitionLog(path, segment_bytes=256)
+    assert log.orphaned_segments == len(segs) - 1
+    assert len(calls) >= created + log.orphaned_segments
+    log.close()
+
+    # fsync="never" opts out of directory durability along with data fsync
+    calls.clear()
+    with DurablePartitionLog(str(tmp_path / "p1"), fsync="never") as log:
+        log.append(None, "x", 0.0)
+    assert calls == ["never"]              # invoked, but a no-op inside

@@ -703,3 +703,31 @@ def test_in_process_group_threads_spawn_nothing_extra():
     before = threading.active_count()
     test_streaming_contexts_split_partitions_disjoint()
     assert threading.active_count() == before
+
+
+def test_run_until_zero_timeout_is_immediate_not_forever(tmp_path):
+    """timeout=0 means "the deadline already passed": run_until must return
+    False at once, before stepping a batch — the old truthiness-tested
+    deadline treated 0 as "no deadline" and would spin forever on a
+    predicate that never comes true."""
+    broker = Broker()
+    broker.create_topic("t", 1)
+    for i in range(5):
+        broker.produce("t", i)
+    outdir = str(tmp_path / "w")
+    os.makedirs(outdir)
+    gc = GroupConsumer(broker, "g", "t", str(tmp_path / "state"),
+                       window=WindowSpec(size=100),
+                       window_fn=_fire_to(outdir), consumer_id="c1")
+    try:
+        t0 = time.perf_counter()
+        assert gc.run_until(lambda: False, timeout=0) is False
+        assert time.perf_counter() - t0 < 1.0
+        assert broker.committed("t", group="g") == [0]  # nothing consumed
+        # an already-satisfied predicate still wins at timeout=0...
+        assert gc.run_until(lambda: True, timeout=0) is True
+        # ...and a real timeout still lets work proceed
+        assert gc.run_until(lambda: broker.lag("t", group="g") == 0,
+                            timeout=30) is True
+    finally:
+        gc.close()
