@@ -20,8 +20,11 @@ path by <= 1.1x the registry-off run, four group consumers
 (``ingest/group_scaleout``) must drain a 4-partition topic at >= 2x the
 single-consumer rate, and a live broker replica
 (``ingest/replication_overhead``) must tax the durable produce path by
-<= 1.3x the unreplicated run (exit 1 on regression; ``make bench-check``
-wires it into CI).
+<= 1.3x the unreplicated run, same-host shm frames
+(``ingest/shm_fastpath``) must beat 'A'-frame produce by >= 5x on bulk
+frames, and int8-codec ingest (``ingest/compressed_ingest``) must beat
+raw ingest over a bandwidth-limited link by >= 2x (exit 1 on regression;
+``make bench-check`` wires it into CI).
 """
 from __future__ import annotations
 
@@ -54,6 +57,13 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--check-replication-overhead", type=float, default=1.3,
                     help="maximum replicated/unreplicated durable produce "
                          "wall-clock ratio for --check (default 1.3)")
+    ap.add_argument("--check-shm-ratio", type=float, default=5.0,
+                    help="minimum shm/'A'-frame same-host bulk produce "
+                         "wall-clock ratio for --check (default 5.0)")
+    ap.add_argument("--check-codec-ratio", type=float, default=2.0,
+                    help="minimum int8-codec/raw ingest wall-clock ratio "
+                         "over a bandwidth-limited link for --check "
+                         "(default 2.0)")
     args = ap.parse_args(argv)
 
     print("name,us_per_call,derived")
@@ -65,7 +75,9 @@ def main(argv: list[str] | None = None) -> int:
             max_window_overhead=args.check_window_overhead,
             max_obs_overhead=args.check_obs_overhead,
             min_group_scaleout=args.check_group_scaleout,
-            max_replication_overhead=args.check_replication_overhead) else 1
+            max_replication_overhead=args.check_replication_overhead,
+            min_shm_ratio=args.check_shm_ratio,
+            min_codec_ratio=args.check_codec_ratio) else 1
 
     from benchmarks import (bench_allreduce, bench_ingest, bench_ptycho,
                             bench_streaming, bench_tomo)

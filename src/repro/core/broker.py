@@ -174,6 +174,8 @@ class Broker:
             log_factory or InMemoryPartitionLog)
         self._locate_logs = _factory_wants_location(self._log_factory)
         self._topics: dict[str, list[PartitionLog]] = {}
+        # topic -> payload codec name (repro.data.codec); absent = raw
+        self._topic_codecs: dict[str, str] = {}
         # topic -> group -> per-partition committed offsets
         self._committed: dict[str, dict[str, list[int]]] = {}
         self._lock = threading.Lock()
@@ -222,14 +224,32 @@ class Broker:
             return self._log_factory(topic=topic, partition=partition)
         return self._log_factory()
 
-    def create_topic(self, topic: str, partitions: int = 1) -> None:
+    def create_topic(self, topic: str, partitions: int = 1,
+                     codec: str | None = None) -> None:
+        if codec is not None:
+            # validate the name now (constructor-time import, see __init__):
+            # a typo'd codec must fail topic creation, not the first decode
+            from repro.data.codec import get_codec
+            codec = get_codec(codec).name
         with self._lock:
             if topic in self._topics:
                 raise ValueError(f"topic {topic!r} exists")
             logs = [self._new_log(topic, p) for p in range(partitions)]
             self._topics[topic] = logs
             self._committed[topic] = {DEFAULT_GROUP: [0] * partitions}
+            if codec is not None:
+                self._topic_codecs[topic] = codec
         self._register_topic_metrics(topic, logs)
+
+    def topic_codec(self, topic: str) -> str | None:
+        """The payload codec this topic was created with (``None`` = raw).
+        Advisory: producers (``IngestRunner``) encode values at the
+        source→broker boundary, consumers decode at subscribe — the broker
+        itself never looks inside a value, so the durable log and the
+        replication path carry codec'd payloads verbatim."""
+        self._topic(topic)             # raise KeyError for unknown topics
+        with self._lock:
+            return self._topic_codecs.get(topic)
 
     def topics(self) -> list[str]:
         with self._lock:

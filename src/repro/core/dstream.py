@@ -471,7 +471,11 @@ class StreamingContext:
         per_topic: dict[str, list[OffsetRange]] = {}
         for r in ranges:
             per_topic.setdefault(r.topic, []).append(r)
-        topic_rdds = [create_rdd(self.context, self.broker, rs, self._decoder)
+        # codec decode first (per-topic payload codecs are self-describing,
+        # see repro.data.codec), then the subscriber's own value_decoder
+        from repro.data.codec import compose_decoder
+        decoder = compose_decoder(self._decoder)
+        topic_rdds = [create_rdd(self.context, self.broker, rs, decoder)
                       for rs in per_topic.values()]
         union = (topic_rdds[0].union(*topic_rdds[1:])
                  if len(topic_rdds) > 1 else topic_rdds[0])

@@ -45,6 +45,14 @@ Class                             Reproduces
                                   over TCP / Unix sockets to other processes
 ``transport.RemoteBroker``        Kafka client / paper's ZeroMQ direction:
                                   the ``Broker`` surface spoken over a socket
+                                  (same-host producers negotiate shared-
+                                  memory ``'S'`` frames: bulk bytes skip the
+                                  socket entirely)
+``codec.Codec``                   DELTA's reduce-at-the-source role: per-
+                                  topic payload codecs (lossy ``int8``
+                                  quantization, lossless ``zlib``) applied
+                                  at the ingest flush boundary, decoded at
+                                  subscribe, opaque to log + replication
 ``durable_log.DurablePartitionLog``  Kafka's on-disk log segments: records
                                   survive a broker restart, torn tails are
                                   truncated by the recovery scan
@@ -73,6 +81,9 @@ Class                             Reproduces
 All sinks are idempotent by key, upgrading the dstream layer's at-least-once
 replay to exactly-once end-to-end.
 """
+from repro.data.codec import (Codec, CodecBroker, UnknownCodecError,
+                              codec_names, get_codec, maybe_decode,
+                              register_codec)
 from repro.data.delivery import (DeliveryFailed, DeliveryRuntime, LaneMetrics,
                                  SinkLane, SinkPolicy, SinkTimeoutError)
 from repro.data.durable_log import (DurableLogFactory, DurablePartitionLog,
@@ -116,6 +127,8 @@ __all__ = [
     "DeliveryFailed", "SinkTimeoutError",
     "BrokerServer", "RemoteBroker", "serve_broker", "parse_address",
     "TransportError", "FrameError",
+    "Codec", "CodecBroker", "UnknownCodecError", "get_codec", "codec_names",
+    "maybe_decode", "register_codec",
     "GroupCoordinator", "GroupMember", "GroupConsumer", "sticky_assign",
     "GroupError", "StaleGenerationError",
     "DurablePartitionLog", "DurableLogFactory", "LogCorruptionError",

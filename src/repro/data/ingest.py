@@ -75,6 +75,13 @@ class IngestConfig:
     # group's offsets, so the runner's usual lag signal would read the
     # whole log as unconsumed and block forever).
     consumer_group: str = ""
+    # Payload codec (repro.data.codec) applied to every value at the flush
+    # boundary — the DELTA-style "reduce at the source" hook. None inherits
+    # the topic's own codec (create_topic(codec=...)); topics this runner
+    # creates are created *with* this codec so late-joining producers
+    # inherit it too. Values are self-describing, so consumers decode with
+    # no configuration (StreamingContext/TopicSource already do).
+    codec: str | None = None
 
     def __post_init__(self) -> None:
         if self.policy not in POLICIES:
@@ -122,6 +129,22 @@ def _estimate_bytes(value) -> int:
     return 64
 
 
+def _deep_bytes(value) -> int:
+    """Container-walking size estimate for the codec byte counters (codec'd
+    values are dicts wrapping arrays/blobs, which _estimate_bytes treats as
+    opaque 64-byte objects)."""
+    nbytes = getattr(value, "nbytes", None)
+    if nbytes is not None:
+        return int(nbytes)
+    if isinstance(value, (bytes, bytearray, memoryview, str)):
+        return len(value)
+    if isinstance(value, dict):
+        return sum(_deep_bytes(v) for v in value.values()) + 16 * len(value)
+    if isinstance(value, (list, tuple)):
+        return sum(_deep_bytes(v) for v in value) + 8 * len(value)
+    return 8
+
+
 @dataclass
 class _Entry:
     source: Source
@@ -132,6 +155,9 @@ class _Entry:
     buf: list = field(default_factory=list)   # (key, value, partition)
     buf_bytes: int = 0
     buf_oldest: float = 0.0        # monotonic time of oldest buffered record
+    # effective payload codec, resolved once in add() (config override, else
+    # the topic's create_topic codec); None = raw, nothing touches the value
+    codec: Any = None
     # registry instruments, resolved once in add() so the pump loop pays a
     # plain attribute read per event, never a registry lookup
     m_polls: Any = None
@@ -140,6 +166,8 @@ class _Entry:
     m_sampled: Any = None
     m_blocked: Any = None
     m_flush: Any = None
+    m_codec_in: Any = None
+    m_codec_out: Any = None
 
 
 class IngestRunner:
@@ -169,7 +197,11 @@ class IngestRunner:
     def add(self, source: Source, config: IngestConfig) -> SourceMetrics:
         if config.topic not in self.broker.topics():
             try:
-                self.broker.create_topic(config.topic, config.partitions)
+                if config.codec is not None:
+                    self.broker.create_topic(config.topic, config.partitions,
+                                             codec=config.codec)
+                else:
+                    self.broker.create_topic(config.topic, config.partitions)
             except ValueError:
                 # another producer won the check-then-create race, or a
                 # retried remote create whose first ack was lost — either
@@ -180,6 +212,19 @@ class IngestRunner:
         # (over RemoteBroker that query is a full round trip)
         n = self.broker.num_partitions(config.topic)
         e = _Entry(source, config, m, partitions=n)
+        # effective codec, resolved once: the config's override, else the
+        # topic's own (pre-existing topics keep their create_topic codec).
+        # "raw"/None both mean "leave the value alone" — skip the encode
+        # call entirely on that hot path.
+        name = config.codec
+        if name is None:
+            topic_codec = getattr(self.broker, "topic_codec", None)
+            if topic_codec is not None:
+                name = topic_codec(config.topic)
+        if name is not None:
+            from repro.data.codec import get_codec
+            codec = get_codec(name)
+            e.codec = None if codec.name == "raw" else codec
         self._register_metrics(e)
         self._entries.append(e)
         return m
@@ -208,6 +253,16 @@ class IngestRunner:
         e.m_flush = reg.histogram(
             "ingest_flush_records", help="records per batched flush",
             labels=labels, buckets=COUNT_BUCKETS)
+        if e.codec is not None:
+            codec_labels = {"topic": topic, "codec": e.codec.name}
+            e.m_codec_in = reg.counter(
+                "ingest_codec_bytes_in",
+                help="estimated value bytes entering the codec at flush",
+                labels=codec_labels)
+            e.m_codec_out = reg.counter(
+                "ingest_codec_bytes_out",
+                help="estimated value bytes after codec encode",
+                labels=codec_labels)
         reg.gauge("ingest_lag", help="produced-but-unconsumed records",
                   labels=labels,
                   callback=lambda e=e: self._lag(e))
@@ -275,6 +330,19 @@ class IngestRunner:
         buf, e.buf, e.buf_bytes = e.buf, [], 0
         now = time.monotonic() if now is None else now
         by_partition: dict[int, list] = {}
+        if e.codec is not None:
+            # the source→broker encode boundary: values are codec'd here and
+            # travel encoded through the broker, the durable log, and the
+            # replication path; consumers decode at subscribe
+            encode = e.codec.encode
+            bytes_in = bytes_out = 0
+            for i, (key, value, partition) in enumerate(buf):
+                bytes_in += _deep_bytes(value)
+                value = encode(value)
+                bytes_out += _deep_bytes(value)
+                buf[i] = (key, value, partition)
+            e.m_codec_in.inc(bytes_in)
+            e.m_codec_out.inc(bytes_out)
         for key, value, partition in buf:
             by_partition.setdefault(partition, []).append((key, value))
         produce_many = getattr(self.broker, "produce_many", None)

@@ -585,8 +585,12 @@ class FailoverBroker:
         return offsets
 
     # -- Broker surface: passthrough --------------------------------------
-    def create_topic(self, topic: str, partitions: int = 1) -> None:
-        self._call("create_topic", topic, partitions)
+    def create_topic(self, topic: str, partitions: int = 1,
+                     codec: str | None = None) -> None:
+        self._call("create_topic", topic, partitions, codec=codec)
+
+    def topic_codec(self, topic: str) -> str | None:
+        return self._call("topic_codec", topic)
 
     def topics(self) -> list[str]:
         return self._call("topics")

@@ -232,6 +232,10 @@ class TopicSource:
         self._offsets = [0] * broker.num_partitions(topic)
 
     def poll(self, max_records: int) -> list[RecordKV]:
+        # codec'd topics (repro.data.codec) decode here, at the consume
+        # boundary, so re-ingest stages see the same values a subscriber
+        # would — and a chained stage's own codec re-encodes on its flush
+        from repro.data.codec import maybe_decode
         out: list[RecordKV] = []
         for p, start in enumerate(self._offsets):
             if len(out) >= max_records:
@@ -241,7 +245,7 @@ class TopicSource:
             if until <= start:
                 continue
             recs = self.broker.read(OffsetRange(self.topic, p, start, until))
-            out.extend((r.key, r.value) for r in recs)
+            out.extend((r.key, maybe_decode(r.value)) for r in recs)
             self._offsets[p] = until
         return out
 

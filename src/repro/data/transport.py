@@ -37,6 +37,17 @@ The frame payload itself carries a one-byte *message kind*:
   skip pickling entirely on encode — the buffers are sent straight from the
   array memory — and on decode they are reconstructed as views over the
   received frame buffer: zero copy on the detector/projection hot path.
+- ``S`` — a *shared-memory frame*: the same skeleton + out-of-band buffer
+  split as ``A``, but the buffer bytes live in a server-owned
+  ``multiprocessing.shared_memory`` segment and only ``(offset, length)``
+  descriptors cross the socket. Same-host only, negotiated per connection
+  by a ``hello`` capability exchange (hostname + kernel boot id must match
+  on both sides); requests fall back to ``A`` frames automatically when the
+  negotiation fails, the :data:`USE_SHM_FRAMES` kill switch is off, or the
+  server declines a segment lease. Segments are pooled per connection,
+  ref-counted against the arrays decoded out of them, and unlinked by the
+  *server* the moment the connection drops — a SIGKILLed producer strands
+  nothing in ``/dev/shm``.
 
 Delivery/ordering semantics match the in-process broker: per-partition total
 order (one handler thread executes one client's requests in order; the log
@@ -45,13 +56,19 @@ append itself is locked), no order across partitions or across clients.
 from __future__ import annotations
 
 import io
+import itertools
+import os
 import pickle
 import socket
 import struct
 import threading
 import time
+import weakref
 import zlib
+from multiprocessing import resource_tracker, shared_memory
 from typing import Any, Callable
+
+import numpy as np
 
 from repro.core.broker import (  # noqa: F401
     Broker, BrokerFencedError, NotPrimaryError, OffsetRange, Record)
@@ -66,16 +83,34 @@ _HEADER = struct.Struct(">2sII")       # magic | payload length | crc32
 MAX_FRAME_BYTES = 256 * 1024 * 1024    # reject absurd lengths before alloc
 
 # Message kinds: first payload byte. P = restricted pickle; A = array frame
-# (pickled skeleton + raw out-of-band ndarray buffers, layout below).
+# (pickled skeleton + raw out-of-band ndarray buffers, layout below);
+# S = shared-memory frame (buffers live in a shm segment, only descriptors
+# cross the socket).
 KIND_PICKLE = b"P"
 KIND_ARRAY = b"A"
+KIND_SHM = b"S"
 # Array frame body, after the kind byte:
 #   u32 skeleton_len | u32 nbufs | nbufs x u64 buf_len | skeleton | buf0 ...
 _ARRAY_HEADER = struct.Struct(">II")
+# Shared-memory frame body, after the kind byte:
+#   u32 skeleton_len | u32 nbufs | u16 name_len | name |
+#   nbufs x (u64 offset | u64 length) | skeleton
+_SHM_HEADER = struct.Struct(">IIH")
+_SHM_DESC = struct.Struct(">QQ")
 
 # Flip to False to force every ndarray through the pickle path (the PR 2
 # behavior) — benchmarks use this to price the array fast path.
 USE_ARRAY_FRAMES = True
+
+# Kill switch for the shared-memory fast path: False refuses it on both
+# sides of the hello negotiation, so every frame degrades to 'A'/'P'.
+USE_SHM_FRAMES = True
+
+# Per-connection cap on pooled shm segment bytes; past it shm_alloc declines
+# and the client falls back to 'A' frames (a safety valve, not an error).
+SHM_POOL_MAX_BYTES = 256 * 1024 * 1024
+_SHM_SEGMENT_MIN = 1 << 20             # round leases up so segments recycle
+_SHM_PREFIX = "reproshm"               # /dev/shm names: leak tests grep this
 
 # Address = ("host", port) for TCP, or "path.sock" for a Unix domain socket.
 Address = "tuple[str, int] | str"
@@ -92,6 +127,30 @@ class FrameError(TransportError):
     dropped."""
 
 
+_HAVE_SENDMSG = hasattr(socket.socket, "sendmsg")
+_IOV_BATCH = 512                       # stay safely under IOV_MAX (1024)
+
+
+def _sendmsg_all(sock: socket.socket, parts) -> None:
+    """``sendall`` for a list of buffers via scatter-gather ``sendmsg`` (one
+    syscall per ~512 buffers, resuming partial sends mid-buffer) — the parts
+    are never concatenated, so nothing here is O(frame) beyond the kernel
+    copy itself. Falls back to serial ``sendall`` without ``sendmsg``."""
+    views = [(p if isinstance(p, memoryview) else memoryview(p)).cast("B")
+             for p in parts]
+    if not _HAVE_SENDMSG:               # pragma: no cover - non-POSIX
+        for v in views:
+            sock.sendall(v)
+        return
+    while views:
+        sent = sock.sendmsg(views[:_IOV_BATCH])
+        while views and sent >= views[0].nbytes:
+            sent -= views[0].nbytes
+            views.pop(0)
+        if sent:                        # partial buffer: resume mid-view
+            views[0] = views[0][sent:]
+
+
 def send_frame(sock: socket.socket, payload) -> None:
     """Write one length-prefixed, checksummed frame of raw ``payload`` bytes."""
     if len(payload) > MAX_FRAME_BYTES:
@@ -100,7 +159,10 @@ def send_frame(sock: socket.socket, payload) -> None:
         raise FrameError(
             f"frame length {len(payload)} exceeds {MAX_FRAME_BYTES}")
     header = _HEADER.pack(MAGIC, len(payload), zlib.crc32(payload))
-    sock.sendall(header + payload)
+    # header and payload as two iovecs of one sendmsg — never `header +
+    # payload`, which copied the whole payload (up to 256 MiB) to prepend
+    # 10 bytes
+    _sendmsg_all(sock, [header, payload])
 
 
 def _recv_exact(sock: socket.socket, n: int, *, at_boundary: bool
@@ -253,6 +315,274 @@ def decode_message(payload) -> Any:
         raise FrameError(f"undecodable {kind!r} message: {e}") from e
 
 
+# -- shared-memory frames ('S'): same-host zero-copy bulk path ---------------
+
+_host_token_cache: str | None = None
+
+
+def _host_token() -> str:
+    """This machine's identity for the same-host shm negotiation: hostname
+    plus the kernel boot id, so two hosts sharing a hostname never falsely
+    negotiate shared memory. (Containers sharing a kernel but not /dev/shm
+    normally differ in hostname; :data:`USE_SHM_FRAMES` covers the rest.)"""
+    global _host_token_cache
+    if _host_token_cache is None:
+        try:
+            with open("/proc/sys/kernel/random/boot_id") as f:
+                boot = f.read().strip()
+        except OSError:                # pragma: no cover - non-Linux
+            boot = "-"
+        _host_token_cache = f"{socket.gethostname()}:{boot}"
+    return _host_token_cache
+
+
+def build_shm_payload(skeleton, bufs, name: str, seg: memoryview) -> bytes:
+    """Copy out-of-band buffers into the shared-memory view ``seg`` (packed
+    back to back from offset 0) and return the small ``S`` frame payload
+    describing them. The caller leased ``seg`` via the ``shm_alloc`` op, so
+    it is at least ``sum(nbytes)`` long."""
+    name_b = name.encode("ascii")
+    descs, pos = [], 0
+    for b in bufs:
+        m = (b if isinstance(b, memoryview) else memoryview(b)).cast("B")
+        n = m.nbytes
+        seg[pos:pos + n] = m
+        descs.append(_SHM_DESC.pack(pos, n))
+        pos += n
+    return b"".join((KIND_SHM,
+                     _SHM_HEADER.pack(len(skeleton), len(bufs), len(name_b)),
+                     name_b, *descs, skeleton))
+
+
+def decode_shm_payload(payload, resolve) -> tuple[Any, str]:
+    """Decode one ``S`` frame payload. ``resolve(name)`` maps a segment name
+    to its memoryview (``None`` for a segment this connection does not own —
+    refused, like every other malformed descriptor, with
+    :class:`FrameError`). Returns ``(message, segment_name)``; arrays are
+    zero-copy views over the shared segment, so the segment must stay mapped
+    for as long as they live (:class:`_ShmPool` ref-counts exactly that)."""
+    view = memoryview(payload)
+    body = view[1:]
+    try:
+        if body.nbytes < _SHM_HEADER.size:
+            raise FrameError("shm message too short for its header")
+        skeleton_len, nbufs, name_len = _SHM_HEADER.unpack_from(body, 0)
+        pos = _SHM_HEADER.size
+        descs_end = pos + name_len + _SHM_DESC.size * nbufs
+        if descs_end + skeleton_len != body.nbytes:
+            raise FrameError("shm message region lengths do not add up")
+        name = bytes(body[pos:pos + name_len]).decode("ascii", "replace")
+        pos += name_len
+        seg = resolve(name)
+        if seg is None:
+            raise FrameError(f"shm message names unknown segment {name!r}")
+        bufs = []
+        for _ in range(nbufs):
+            off, length = _SHM_DESC.unpack_from(body, pos)
+            pos += _SHM_DESC.size
+            if off + length > seg.nbytes:
+                raise FrameError(
+                    f"shm descriptor [{off}, {off + length}) outside its "
+                    f"{seg.nbytes}-byte segment")
+            bufs.append(seg[off:off + length])
+        return _restricted_load(body[descs_end:], bufs), name
+    except FrameError:
+        raise
+    except Exception as e:             # torn pickle, struct error, ...
+        raise FrameError(f"undecodable {KIND_SHM!r} message: {e}") from e
+
+
+_shm_seq = itertools.count()
+
+
+class _ShmSegment:
+    """One server-owned shared-memory segment plus its bookkeeping: a lease
+    flag (handed to the client, no ``S`` frame seen yet), a refcount of live
+    arrays decoded out of it, and the mapped address range the refcounter
+    matches arrays against."""
+
+    __slots__ = ("shm", "size", "addr", "refs", "leased", "unlinked")
+
+    def __init__(self, size: int) -> None:
+        name = f"{_SHM_PREFIX}_{os.getpid()}_{next(_shm_seq)}"
+        self.shm = shared_memory.SharedMemory(name=name, create=True,
+                                              size=size)
+        self.size = self.shm.size
+        probe = np.frombuffer(self.shm.buf, dtype=np.uint8)
+        self.addr = probe.__array_interface__["data"][0]
+        del probe                      # drop the buffer export before close
+        self.refs = 0
+        self.leased = False
+        self.unlinked = False
+
+    @property
+    def name(self) -> str:
+        return self.shm.name
+
+
+def _abandon_shm(shm: shared_memory.SharedMemory) -> None:
+    """A view over the mapping is still exported (e.g. interpreter shutdown
+    runs ``weakref.finalize`` callbacks while the arrays are technically
+    alive), so ``close()`` raises BufferError — and letting
+    ``SharedMemory.__del__`` retry would spray "Exception ignored" noise.
+    Abandon the mapping instead: drop our references, close the fd, and let
+    the mmap die with its last view. The name is already unlinked, so the
+    memory is reclaimed with the process either way."""
+    shm._buf = None
+    shm._mmap = None
+    if shm._fd >= 0:                   # pragma: no branch
+        os.close(shm._fd)
+        shm._fd = -1
+
+
+def _close_shm(shm: shared_memory.SharedMemory) -> None:
+    try:
+        shm.close()
+    except BufferError:
+        _abandon_shm(shm)
+
+
+_tracker_patch_lock = threading.Lock()
+
+
+def _attach_untracked(name: str) -> shared_memory.SharedMemory:
+    """Attach a server-owned segment without registering it with this
+    process's resource_tracker. Python 3.10 registers *attached* segments
+    too (3.13 grew ``track=False``); if this process shares its tracker
+    with the server — a ``multiprocessing`` child does — any register or
+    unregister we issue unbalances the server's own create/unlink pair and
+    the shared tracker dies with a KeyError traceback at unlink time. So
+    suppress the registration at the source: swallow register calls for
+    exactly this name while attaching (the name is unique to one lease, so
+    nothing else can race into the filter)."""
+    with _tracker_patch_lock:
+        orig = resource_tracker.register
+
+        def _skip(rname: str, rtype: str) -> None:
+            if rtype == "shared_memory" and rname.lstrip("/") == name:
+                return
+            orig(rname, rtype)
+
+        resource_tracker.register = _skip
+        try:
+            return shared_memory.SharedMemory(name=name)
+        finally:
+            resource_tracker.register = orig
+
+
+def _close_segment(seg: _ShmSegment) -> None:
+    _close_shm(seg.shm)
+
+
+def _walk_arrays(obj, out: list) -> list:
+    if isinstance(obj, np.ndarray):
+        out.append(obj)
+    elif isinstance(obj, (list, tuple, set, frozenset)):
+        for x in obj:
+            _walk_arrays(x, out)
+    elif isinstance(obj, dict):
+        for k, v in obj.items():
+            _walk_arrays(k, out)
+            _walk_arrays(v, out)
+    return out
+
+
+class _ShmPool:
+    """Per-connection pool of server-owned shared-memory segments.
+
+    A client leases a segment (``shm_alloc``), copies its array buffers in
+    and sends an ``S`` frame naming it; the arrays decoded out of the frame
+    are zero-copy views over the mapping, so the pool pins the segment with
+    one refcount per such array (``weakref.finalize``) and only recycles it
+    for a later lease once every view died. Ownership is strictly server
+    side: when the connection drops — including a SIGKILLed producer — every
+    segment is unlinked immediately (``release_all``), closing the mappings
+    as their last views die, so nothing is ever stranded in ``/dev/shm``.
+    """
+
+    def __init__(self, max_bytes: int | None = None) -> None:
+        self.max_bytes = (SHM_POOL_MAX_BYTES if max_bytes is None
+                          else max_bytes)
+        self._segments: dict[str, _ShmSegment] = {}
+        self._lock = threading.Lock()
+
+    def alloc(self, size) -> str | None:
+        """Lease a segment of at least ``size`` bytes; ``None`` declines
+        (over the pool cap, or shm unavailable) and the client falls back
+        to an ``A`` frame."""
+        size = int(size)
+        if size <= 0 or size > self.max_bytes:
+            return None
+        with self._lock:
+            free = [s for s in self._segments.values()
+                    if not s.leased and not s.unlinked and s.refs == 0
+                    and s.size >= size]
+            if free:
+                seg = min(free, key=lambda s: s.size)
+            else:
+                total = sum(s.size for s in self._segments.values())
+                want = max(_SHM_SEGMENT_MIN, 1 << (size - 1).bit_length())
+                if total + want > self.max_bytes:
+                    return None
+                try:
+                    seg = _ShmSegment(want)
+                except OSError:        # /dev/shm full or unavailable
+                    return None
+                self._segments[seg.name] = seg
+            seg.leased = True
+            return seg.name
+
+    def resolve(self, name: str) -> memoryview | None:
+        with self._lock:
+            seg = self._segments.get(name)
+            if seg is None or seg.unlinked:
+                return None
+            return memoryview(seg.shm.buf)
+
+    def track(self, name: str, obj: Any) -> None:
+        """End the lease opened by :meth:`alloc` and pin the segment for as
+        long as any ndarray decoded out of it stays alive."""
+        with self._lock:
+            seg = self._segments.get(name)
+            if seg is None:
+                return
+            seg.leased = False
+            for arr in _walk_arrays(obj, []):
+                addr = arr.__array_interface__["data"][0]
+                if seg.addr <= addr < seg.addr + seg.size:
+                    seg.refs += 1
+                    weakref.finalize(arr, self._decref, name)
+
+    def _decref(self, name: str) -> None:
+        with self._lock:
+            seg = self._segments.get(name)
+            if seg is None:
+                return
+            seg.refs -= 1
+            if seg.refs == 0 and seg.unlinked:
+                self._segments.pop(name, None)
+                _close_segment(seg)
+
+    def segment_count(self) -> int:
+        with self._lock:
+            return len(self._segments)
+
+    def release_all(self) -> None:
+        """Connection dropped: unlink every segment *now* (nothing remains
+        in ``/dev/shm``), close each mapping once its last view dies."""
+        with self._lock:
+            for seg in list(self._segments.values()):
+                if not seg.unlinked:
+                    seg.unlinked = True
+                    try:
+                        seg.shm.unlink()
+                    except OSError:    # pragma: no cover - already gone
+                        pass
+                if seg.refs == 0:
+                    self._segments.pop(seg.name, None)
+                    _close_segment(seg)
+
+
 def _message_checksum(parts) -> tuple[int, int]:
     total, crc = 0, 0
     for p in parts:
@@ -261,32 +591,16 @@ def _message_checksum(parts) -> tuple[int, int]:
     return total, crc
 
 
-_HAVE_SENDMSG = hasattr(socket.socket, "sendmsg")
-_IOV_BATCH = 512                       # stay safely under IOV_MAX (1024)
-
-
 def _send_parts(sock: socket.socket, parts, total: int, crc: int) -> None:
-    """One frame from pre-encoded parts. The header and small parts coalesce
-    into one send; array buffers go straight from the array memory via
-    scatter-gather ``sendmsg`` (one syscall per ~512 buffers, no copies)."""
+    """One frame from pre-encoded parts. The header and the two small lead
+    parts coalesce into one buffer; everything else — the payload of a
+    single-part frame, every array buffer — goes straight from its own
+    memory via scatter-gather ``sendmsg``, no O(frame) concat anywhere."""
     header = _HEADER.pack(MAGIC, total, crc)
     if len(parts) == 1:
-        sock.sendall(header + parts[0])
+        _sendmsg_all(sock, [header, parts[0]])
         return
-    views = [memoryview(header + parts[0] + parts[1])]
-    views += [(b if isinstance(b, memoryview) else memoryview(b)).cast("B")
-              for b in parts[2:]]
-    if not _HAVE_SENDMSG:               # pragma: no cover - non-POSIX
-        for v in views:
-            sock.sendall(v)
-        return
-    while views:
-        sent = sock.sendmsg(views[:_IOV_BATCH])
-        while views and sent >= views[0].nbytes:
-            sent -= views[0].nbytes
-            views.pop(0)
-        if sent:                        # partial buffer: resume mid-view
-            views[0] = views[0][sent:]
+    _sendmsg_all(sock, [header + parts[0] + parts[1], *parts[2:]])
 
 
 def send_message(sock: socket.socket, obj: Any) -> int:
@@ -319,11 +633,13 @@ def _make_socket(address: Any) -> socket.socket:
 
 # The server executes exactly these broker methods; anything else is an error
 # frame, never an attribute lookup on the broker (no remote getattr).
-# "ping" and "stats" are served by the transport itself, not the broker.
+# "ping", "stats", "hello" and "shm_alloc" are served by the transport
+# itself, not the broker.
 _OPS = frozenset({
     "create_topic", "topics", "num_partitions", "produce", "produce_many",
     "read", "end_offset", "end_offsets", "commit", "committed",
-    "commit_groups", "lag", "ping", "stats",
+    "commit_groups", "lag", "ping", "stats", "hello", "shm_alloc",
+    "topic_codec",
     # consumer-group protocol (repro.data.groups), hosted by the broker
     "join_group", "heartbeat", "sync_group", "leave_group", "describe_group",
     # replication/HA protocol (repro.data.replication): followers pull raw
@@ -360,6 +676,8 @@ class BrokerServer:
         self.address: Any = None       # bound address, set by start()
         self.requests_served = 0
         self.frames_rejected = 0
+        self.shm_frames = 0            # 'S' frames decoded (all connections)
+        self._shm_pools: list[_ShmPool] = []
         # registry instruments (constructor-time import: see Broker.__init__)
         from repro.data.metrics import get_registry
         reg = get_registry()
@@ -375,8 +693,15 @@ class BrokerServer:
         self._m_bytes_out = reg.counter(
             "transport_bytes_sent_total",
             "response frame payload bytes sent")
+        self._m_shm_frames = reg.counter(
+            "transport_shm_frames_total",
+            "'S' frames decoded over server-owned shared-memory segments")
         reg.gauge("transport_connections", "live client connections",
                   callback=lambda: len(self._conns))
+        reg.gauge("transport_shm_segments",
+                  "pooled shared-memory segments across live connections",
+                  callback=lambda: sum(p.segment_count()
+                                       for p in list(self._shm_pools)))
 
     # -- lifecycle ---------------------------------------------------------
     def start(self) -> "BrokerServer":
@@ -434,6 +759,11 @@ class BrokerServer:
                              daemon=True, name="broker-conn").start()
 
     def _serve_conn(self, conn: socket.socket) -> None:
+        # Per-connection shm state: ``enabled`` is flipped by a successful
+        # hello negotiation; the pool owns every segment this client leases.
+        state = {"shm": False, "pool": _ShmPool()}
+        with self._lock:
+            self._shm_pools.append(state["pool"])
         try:
             while not self._stop.is_set():
                 try:
@@ -450,7 +780,7 @@ class BrokerServer:
                     return                 # client closed cleanly
                 self._m_bytes_in.inc(len(payload))
                 try:
-                    sent = send_message(conn, self._dispatch(payload))
+                    sent = send_message(conn, self._dispatch(payload, state))
                 except FrameError:
                     # response too large for one frame: tell the client
                     # instead of dying silently (e.g. a read() of a huge
@@ -463,14 +793,45 @@ class BrokerServer:
         except OSError:
             pass                           # peer vanished mid-response
         finally:
+            # unlink the connection's shm segments *before* anything else:
+            # this is the no-stranded-/dev/shm guarantee for SIGKILLed and
+            # vanished producers alike
+            state["pool"].release_all()
             conn.close()
             with self._lock:
                 if conn in self._conns:
                     self._conns.remove(conn)
+                if state["pool"] in self._shm_pools:
+                    self._shm_pools.remove(state["pool"])
 
-    def _dispatch(self, payload) -> tuple:
+    def _decode_request(self, payload, state) -> Any:
+        if bytes(memoryview(payload)[:1]) == KIND_SHM:
+            if not state["shm"]:
+                raise FrameError(
+                    "shm frame on a connection that did not negotiate it")
+            msg, name = decode_shm_payload(payload, state["pool"].resolve)
+            # the lease ends here; the segment stays pinned while any array
+            # decoded out of it is alive
+            state["pool"].track(name, msg)
+            with self._lock:
+                self.shm_frames += 1
+            self._m_shm_frames.inc()
+            return msg
+        return decode_message(payload)
+
+    def _hello(self, state, caps: dict) -> dict:
+        """Capability negotiation: shm frames are offered only when both
+        sides want them *and* the client proved it shares this host (same
+        hostname + kernel boot id, so /dev/shm is the same filesystem)."""
+        same_host = caps.get("host") == _host_token()
+        state["shm"] = bool(USE_SHM_FRAMES and same_host
+                            and caps.get("shm"))
+        return {"shm": state["shm"], "host": _host_token(),
+                "shm_max_bytes": state["pool"].max_bytes}
+
+    def _dispatch(self, payload, state) -> tuple:
         try:
-            op, args, kwargs = decode_message(payload)
+            op, args, kwargs = self._decode_request(payload, state)
             if op not in _OPS:
                 raise ValueError(f"unknown op {op!r}")
             with self._lock:
@@ -480,6 +841,12 @@ class BrokerServer:
                 return ("ok", "pong")
             if op == "stats":
                 return ("ok", self.stats())
+            if op == "hello":
+                return ("ok", self._hello(state, *args, **kwargs))
+            if op == "shm_alloc":
+                if not state["shm"]:
+                    return ("ok", None)    # decline: client uses 'A' frames
+                return ("ok", state["pool"].alloc(*args, **kwargs))
             return ("ok", getattr(self.broker, op)(*args, **kwargs))
         except Exception as e:             # broker errors travel as frames
             return ("err", type(e).__name__, str(e))
@@ -491,7 +858,10 @@ class BrokerServer:
         with self._lock:
             return {"requests_served": self.requests_served,
                     "frames_rejected": self.frames_rejected,
-                    "connections": len(self._conns)}
+                    "connections": len(self._conns),
+                    "shm_frames": self.shm_frames,
+                    "shm_segments": sum(p.segment_count()
+                                        for p in self._shm_pools)}
 
 
 def serve_broker(broker: Broker, address: Any = ("127.0.0.1", 0)
@@ -522,14 +892,27 @@ class RemoteBroker:
     ``produce``/``produce_many`` whose ack was lost may duplicate the record
     (or the whole batch): delivery is at-least-once, and exactly-once is
     restored by idempotent sinks (``docs/transport.md``).
+
+    ``shm`` controls the same-host shared-memory fast path: ``None`` follows
+    the module :data:`USE_SHM_FRAMES` kill switch, ``False`` opts this client
+    out (benchmarks price the two paths against each other this way). When
+    negotiated, array-bearing requests lease a server-owned segment per
+    request, copy the buffers in, and send a small ``S`` descriptor frame
+    instead of the bulk bytes; anything that fails along the way falls back
+    to a plain ``A`` frame.
     """
 
     def __init__(self, address: Any, connect_timeout: float = 5.0,
-                 max_retries: int = 5, retry_delay: float = 0.05) -> None:
+                 max_retries: int = 5, retry_delay: float = 0.05,
+                 shm: bool | None = None) -> None:
         self.address = address
         self.connect_timeout = connect_timeout
         self.max_retries = max_retries
         self.retry_delay = retry_delay
+        self._shm_want = shm
+        self._shm_ok = False
+        self._attached: dict[str, shared_memory.SharedMemory] = {}
+        self.shm_frames_sent = 0
         self._sock: socket.socket | None = None
         self._lock = threading.RLock()
         self.reconnects = 0
@@ -553,8 +936,59 @@ class RemoteBroker:
         if isinstance(self.address, tuple):
             sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
         self._sock = sock
+        self._shm_ok = False
+        want = USE_SHM_FRAMES if self._shm_want is None else self._shm_want
+        if want:
+            resp = self._roundtrip(
+                ("hello", ({"host": _host_token(), "shm": True},), {}))
+            if resp[0] == "ok":        # an "err" (old server) just means no shm
+                self._shm_ok = bool(resp[1].get("shm"))
+
+    def _roundtrip(self, msg) -> tuple:
+        """One raw request/response exchange on the live socket — used
+        inside :meth:`_connect`/:meth:`_request` where the usual retry
+        machinery is already wrapped around the caller."""
+        send_message(self._sock, msg)
+        payload = recv_frame(self._sock)
+        if payload is None:
+            raise FrameError("server closed the connection")
+        return decode_message(payload)
+
+    def _detach_segments(self) -> None:
+        for shm in self._attached.values():
+            _close_shm(shm)
+        self._attached.clear()
+
+    def _attach_segment(self, name: str) -> shared_memory.SharedMemory:
+        shm = self._attached.get(name)
+        if shm is None:
+            shm = _attach_untracked(name)
+            self._attached[name] = shm
+        return shm
+
+    def _send_shm(self, parts) -> bool:
+        """Try to send the encoded request as an ``S`` frame: lease a
+        server-owned segment, copy the out-of-band buffers in, send the
+        descriptor frame. ``False`` means the server declined the lease —
+        the caller falls back to a plain ``A`` frame. Socket-level failures
+        raise and land in the caller's retry loop."""
+        bufs = parts[2:]
+        need = sum(_nbytes(b) for b in bufs)
+        if need == 0:
+            return False
+        resp = self._roundtrip(("shm_alloc", (need,), {}))
+        if resp[0] != "ok" or not resp[1]:
+            return False
+        shm = self._attach_segment(resp[1])
+        payload = build_shm_payload(parts[1], bufs, resp[1],
+                                    memoryview(shm.buf))
+        send_frame(self._sock, payload)
+        self.shm_frames_sent += 1
+        return True
 
     def _close(self) -> None:
+        self._detach_segments()
+        self._shm_ok = False
         if self._sock is not None:
             self._sock.close()
             self._sock = None
@@ -572,13 +1006,17 @@ class RemoteBroker:
     # -- request/response --------------------------------------------------
     def _request(self, op: str, *args: Any, **kwargs: Any) -> Any:
         parts = encode_message((op, args, kwargs))
-        total, crc = _message_checksum(parts)
+        total = sum(_nbytes(p) for p in parts)
         if total > MAX_FRAME_BYTES:
             # permanent protocol violation, not a connectivity problem:
             # no number of retries makes an oversized frame fit
             raise FrameError(
                 f"{op} request of {total} bytes exceeds the "
                 f"{MAX_FRAME_BYTES}-byte frame limit")
+        # the frame CRC is an O(payload) pass over the bulk buffers — computed
+        # lazily, only if the bytes actually go through the socket (the shm
+        # path never frames them, and its small descriptor frame has its own)
+        crc: int | None = None
         last: Exception | None = None
         with self._lock:
             for attempt in range(self.max_retries + 1):
@@ -588,7 +1026,13 @@ class RemoteBroker:
                         if attempt:
                             self.reconnects += 1
                             self._m_reconnects.inc()
-                    _send_parts(self._sock, parts, total, crc)
+                    # len(parts) >= 3 ⇔ the request carries out-of-band
+                    # array buffers — the only frames worth a shm round trip
+                    if not (self._shm_ok and len(parts) >= 3
+                            and self._send_shm(parts)):
+                        if crc is None:
+                            crc = _message_checksum(parts)[1]
+                        _send_parts(self._sock, parts, total, crc)
                     payload = recv_frame(self._sock)
                     if payload is None:
                         raise FrameError("server closed the connection")
@@ -616,8 +1060,15 @@ class RemoteBroker:
         ``frames_rejected``, ``connections``) fetched over the wire."""
         return self._request("stats")
 
-    def create_topic(self, topic: str, partitions: int = 1) -> None:
-        self._request("create_topic", topic, partitions)
+    def create_topic(self, topic: str, partitions: int = 1,
+                     codec: str | None = None) -> None:
+        if codec is None:              # wire-compatible with older servers
+            self._request("create_topic", topic, partitions)
+        else:
+            self._request("create_topic", topic, partitions, codec=codec)
+
+    def topic_codec(self, topic: str) -> str | None:
+        return self._request("topic_codec", topic)
 
     def topics(self) -> list[str]:
         return self._request("topics")

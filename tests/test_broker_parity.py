@@ -1,10 +1,11 @@
 """Broker contract parity matrix.
 
-Every test here runs against five interchangeable broker backends — the
+Every test here runs against six interchangeable broker backends — the
 in-process :class:`Broker`, :class:`RemoteBroker` over TCP and over a Unix
 domain socket, a :class:`Broker` storing on disk through
-``DurableLogFactory``, and a replicated primary+follower pair behind
-:class:`FailoverBroker` — pinning the duck type the rest of the system
+``DurableLogFactory``, a replicated primary+follower pair behind
+:class:`FailoverBroker`, and a :class:`CodecBroker` compressing every value
+losslessly — pinning the duck type the rest of the system
 (``IngestRunner``, ``StreamingContext``, ``TopicSource``) relies on:
 identical results, identical error types, including ``produce_many``'s
 all-or-nothing validation semantics.
@@ -14,16 +15,22 @@ import pytest
 
 from repro.core import Broker, OffsetRange
 from repro.data import RemoteBroker, serve_broker
+from repro.data.codec import CodecBroker
 from repro.data.durable_log import DurableLogFactory
 from repro.data.replication import FailoverBroker, ReplicaFollower
 
-BACKENDS = ("local", "durable", "uds", "tcp", "failover")
+BACKENDS = ("local", "durable", "uds", "tcp", "failover", "codec")
 
 
 @pytest.fixture(params=BACKENDS)
 def anybroker(request, tmp_path):
     if request.param == "local":
         yield Broker()
+        return
+    if request.param == "codec":
+        # lossless zlib wrapper: encode on produce, decode on read must be
+        # observationally invisible against the whole contract matrix
+        yield CodecBroker(Broker(), codec="zlib")
         return
     if request.param == "durable":
         yield Broker(log_factory=DurableLogFactory(str(tmp_path / "wal")))

@@ -10,6 +10,12 @@ import zlib
 
 import pytest
 
+# The test process has JAX's threads running; os.fork() under threads is
+# what the RuntimeWarning warns about, so every subprocess here uses the
+# spawn context and this marker turns any regression into a failure.
+pytestmark = pytest.mark.filterwarnings(
+    "error:os.fork\\(\\) was called:RuntimeWarning")
+
 from repro.core import (Broker, Context, InMemoryPartitionLog, OffsetRange,
                         PartitionLog, StreamingContext)
 from repro.data.transport import (MAGIC, BrokerServer, FrameError,
@@ -200,7 +206,7 @@ def test_append_read_across_processes(tmp_path):
     broker.create_topic("xp", 2)
     server = serve_broker(broker, ("127.0.0.1", 0))
     try:
-        proc = mp.get_context("fork").Process(
+        proc = mp.get_context("spawn").Process(
             target=_producer_main, args=(server.address, 40))
         proc.start()
         proc.join(timeout=30)
@@ -430,6 +436,190 @@ def test_ingest_flush_deadline_and_done():
     assert m.produced == 1
     source.exhausted = True
     assert runner.done
+
+
+# -- shared-memory 'S' frames end to end -------------------------------------
+
+def _shm_leftovers() -> list[str]:
+    """Segments created by this process's servers still visible in /dev/shm
+    (the pool names embed the creator pid, so other processes never alias)."""
+    prefix = f"reproshm_{os.getpid()}_"
+    try:
+        return [f for f in os.listdir("/dev/shm") if f.startswith(prefix)]
+    except FileNotFoundError:             # pragma: no cover - non-Linux
+        return []
+
+
+def _wait_no_shm_leftovers(timeout: float = 5.0) -> list[str]:
+    deadline = time.monotonic() + timeout
+    leftovers = _shm_leftovers()
+    while leftovers and time.monotonic() < deadline:
+        time.sleep(0.02)
+        leftovers = _shm_leftovers()
+    return leftovers
+
+
+def test_shm_negotiated_same_host_end_to_end(served):
+    """A same-host UDS client negotiates shm in hello; array-bearing
+    produces ride 'S' frames (bulk bytes never on the socket), reads are
+    exact, and closing the connection strands nothing in /dev/shm."""
+    np = pytest.importorskip("numpy")
+    broker, server, client = served
+    client.create_topic("frames")
+    arrs = [np.arange(i, i + 64 * 64, dtype=np.float32).reshape(64, 64)
+            for i in range(6)]
+    for i, a in enumerate(arrs):
+        client.produce("frames", (i, a), key=f"f{i}".encode())
+    assert client.shm_frames_sent == 6
+    assert server.shm_frames == 6
+    assert server.stats()["shm_segments"] >= 1
+    recs = client.read(OffsetRange("frames", 0, 0, 10))
+    for i, rec in enumerate(recs):
+        idx, got = rec.value
+        assert idx == i
+        np.testing.assert_array_equal(got, arrs[i])
+    client.close()
+    assert _wait_no_shm_leftovers() == []
+
+
+def test_shm_kill_switch_fallback_parity(served, monkeypatch):
+    """USE_SHM_FRAMES=False (and shm=False per client) falls back to plain
+    'A' frames with identical results — the kill switch is pure mechanism."""
+    import numpy as np
+
+    import repro.data.transport as tr
+
+    broker, server, _ = served
+    arr = np.arange(128 * 128, dtype=np.float32).reshape(128, 128)
+
+    monkeypatch.setattr(tr, "USE_SHM_FRAMES", False)
+    off = RemoteBroker(server.address)
+    off.create_topic("t")
+    off.produce("t", (0, arr))
+    assert off.shm_frames_sent == 0 and server.shm_frames == 0
+    off.close()
+
+    monkeypatch.undo()
+    optout = RemoteBroker(server.address, shm=False)   # per-client opt-out
+    optout.produce("t", (1, arr))
+    assert optout.shm_frames_sent == 0 and server.shm_frames == 0
+    optout.close()
+
+    on = RemoteBroker(server.address)
+    on.produce("t", (2, arr))
+    assert on.shm_frames_sent == 1 and server.shm_frames == 1
+    recs = on.read(OffsetRange("t", 0, 0, 10))
+    on.close()
+    assert [r.value[0] for r in recs] == [0, 1, 2]
+    for _, got in (r.value for r in recs):             # all three paths equal
+        np.testing.assert_array_equal(got, arr)
+    assert _wait_no_shm_leftovers() == []
+
+
+def test_attach_segment_never_touches_resource_tracker(monkeypatch):
+    """Attaching a server-owned segment must neither register nor
+    unregister it with this process's resource_tracker: a producer spawned
+    via ``multiprocessing`` *shares* the server's tracker, so either call
+    unbalances the server's own create/unlink pair and the shared tracker
+    dies with a KeyError traceback when the server unlinks (regression:
+    ``examples/remote_ingest.py`` printed exactly that)."""
+    from multiprocessing import resource_tracker, shared_memory
+
+    from repro.data.transport import _attach_untracked, _close_shm
+
+    seg = shared_memory.SharedMemory(
+        create=True, size=4096, name=f"reproshm_{os.getpid()}_attachtest")
+    calls: list[tuple] = []
+    try:
+        monkeypatch.setattr(resource_tracker, "register",
+                            lambda n, t: calls.append(("register", n, t)))
+        monkeypatch.setattr(resource_tracker, "unregister",
+                            lambda n, t: calls.append(("unregister", n, t)))
+        shm = _attach_untracked(seg.name)
+        assert shm.buf is not None and shm.size >= 4096
+        _close_shm(shm)
+        observed = list(calls)
+        # the patched register must be restored, not left swallowing
+        assert resource_tracker.register.__name__ == "<lambda>"
+    finally:
+        monkeypatch.undo()
+        seg.close()
+        seg.unlink()
+    assert observed == []
+
+
+def test_shm_hello_refuses_foreign_host(served):
+    """A hello claiming a different host token is denied shm (descriptors
+    would name segments the peer cannot map)."""
+    from repro.data.transport import decode_message, send_message
+
+    _, server, _ = served
+    sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+    sock.settimeout(5)
+    sock.connect(server.address)
+    try:
+        send_message(sock, ("hello", ({"host": "elsewhere:0000",
+                                       "shm": True},), {}))
+        status, caps = decode_message(recv_frame(sock))
+        assert status == "ok" and caps["shm"] is False
+        # and an shm_alloc on the un-negotiated connection declines cleanly
+        send_message(sock, ("shm_alloc", (1024,), {}))
+        assert decode_message(recv_frame(sock)) == ("ok", None)
+    finally:
+        sock.close()
+
+
+_CHAOS_PRODUCER = r"""
+import sys
+import numpy as np
+from repro.data.transport import RemoteBroker
+
+client = RemoteBroker(sys.argv[1])
+client.create_topic("chaos")
+frame = np.ones((256, 256), dtype=np.float32)
+client.produce("chaos", (0, frame))
+print("READY", client.shm_frames_sent, flush=True)
+while True:
+    client.produce("chaos", (0, frame))
+"""
+
+
+def test_sigkill_mid_produce_leaves_no_shm(tmp_path):
+    """Chaos pin for the server-owned-segments design: SIGKILL a producer
+    mid-stream — the server unlinks every segment the connection leased
+    (nothing stranded in /dev/shm) and the dead producer's resource_tracker
+    has nothing to complain about (attached segments were unregistered)."""
+    import signal
+    import subprocess
+    import sys
+
+    broker = Broker()
+    server = serve_broker(broker, str(tmp_path / "chaos.sock"))
+    try:
+        proc = subprocess.Popen(
+            [sys.executable, "-c", _CHAOS_PRODUCER, server.address],
+            stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True)
+        try:
+            line = proc.stdout.readline()
+            assert line.split() == ["READY", "1"], \
+                f"producer never negotiated shm: {line!r}"
+            assert _shm_leftovers()        # segments live while it streams
+            os.kill(proc.pid, signal.SIGKILL)
+            proc.wait(timeout=10)
+            # EOF arrives only once the producer's resource_tracker (the
+            # last writer on the inherited pipe) has exited too — so this
+            # read observes any leak warning it would ever print
+            stderr = proc.stderr.read()
+        finally:
+            proc.stdout.close()
+            proc.stderr.close()
+        assert "resource_tracker" not in stderr, stderr
+        assert "leaked" not in stderr, stderr
+        assert _wait_no_shm_leftovers() == []
+        assert server.stats()["shm_segments"] == 0
+        assert broker.end_offsets("chaos")[0] >= 1   # it did stream for real
+    finally:
+        server.stop()
 
 
 def test_ingest_add_tolerates_create_race():

@@ -4,12 +4,14 @@ The contract under test is connection-drop-only: a frame either decodes to
 *exactly* what was sent, or the receiving side raises ``FrameError`` (clean
 EOF at a frame boundary is ``None``). Truncation at any byte, any single-bit
 flip, or arbitrary garbage must never crash the process and must never
-surface a different ("garbage") record. Both kinds are exercised: ``P``
-(restricted pickle) and ``A`` (array frames: pickled skeleton + raw
-out-of-band ndarray buffers).
+surface a different ("garbage") record. All three kinds are exercised: ``P``
+(restricted pickle), ``A`` (array frames: pickled skeleton + raw out-of-band
+ndarray buffers) and ``S`` (same-host shared-memory frames: the skeleton and
+buffer *descriptors* on the wire, the bulk bytes in a server-owned segment).
 """
 import socket
 import struct
+import threading
 import zlib
 
 import numpy as np
@@ -21,10 +23,11 @@ try:
 except ImportError:          # container has no hypothesis; smoke path below
     HAVE_HYPOTHESIS = False
 
-from repro.data.transport import (KIND_ARRAY, KIND_PICKLE, MAGIC, FrameError,
-                                  decode_message, encode_message,
-                                  recv_frame, recv_message, send_frame,
-                                  send_message)
+from repro.data.transport import (KIND_ARRAY, KIND_PICKLE, KIND_SHM, MAGIC,
+                                  FrameError, _ShmPool, build_shm_payload,
+                                  decode_message, decode_shm_payload,
+                                  encode_message, recv_frame, recv_message,
+                                  send_frame, send_message)
 
 _HEADER = struct.Struct(">2sII")       # mirror of the wire header
 
@@ -227,6 +230,213 @@ def test_garbage_payloads_raise_frame_error_smoke():
     for payload in cases:
         with pytest.raises(FrameError):
             decode_message(payload)
+
+
+# -- exact wire bytes: the scatter-gather send path --------------------------
+
+def _wire_bytes(send_fn) -> bytes:
+    """Everything ``send_fn(sock)`` puts on the wire, read concurrently so
+    large frames cannot deadlock on the socketpair buffer."""
+    a, b = _pair()
+    chunks: list[bytes] = []
+
+    def reader():
+        while True:
+            data = b.recv(1 << 16)
+            if not data:
+                return
+            chunks.append(data)
+
+    t = threading.Thread(target=reader)
+    t.start()
+    try:
+        send_fn(a)
+    finally:
+        a.close()
+    t.join(timeout=10)
+    b.close()
+    assert not t.is_alive()
+    return b"".join(chunks)
+
+
+def test_send_frame_wire_bytes_exact():
+    """``send_frame`` writes exactly header+payload — the sendmsg rewrite
+    (no O(frame) header+payload concat) must be byte-identical on the wire."""
+    import os
+    for payload in (b"", b"k", os.urandom(300_000)):
+        got = _wire_bytes(lambda s: send_frame(s, payload))
+        assert got == _HEADER.pack(MAGIC, len(payload),
+                                   zlib.crc32(payload)) + payload
+
+
+def test_send_message_wire_bytes_exact():
+    """``send_message`` (single-part pickle and multi-part array frames
+    alike) is byte-identical to the concatenated encoding."""
+    objs = [
+        "plain-string",
+        {"k": 1, "nested": [b"bytes", None]},
+        (b"k", _make_array(np.float32, (512, 512))),     # 1 MiB bulk buffer
+        ("produce_many", ("t", [(b"a", _make_array(np.int64, (7,))),
+                                (b"b", _make_array(np.float64, (3, 3)))]),
+         {}),
+    ]
+    for obj in objs:
+        assert _wire_bytes(lambda s: send_message(s, obj)) == _frame_bytes(obj)
+
+
+# -- shared-memory 'S' frames ------------------------------------------------
+
+def _shm_payload(obj, pool: _ShmPool) -> bytes:
+    """Encode ``obj`` the way RemoteBroker._send_shm does: out-of-band
+    buffers into a leased pool segment, small descriptor payload back."""
+    parts = encode_message(obj)
+    assert len(parts) >= 3, "need an array-bearing message for an S frame"
+    bufs = parts[2:]
+    need = sum(b.nbytes if isinstance(b, memoryview) else len(b)
+               for b in bufs)
+    name = pool.alloc(max(need, 1))
+    assert name is not None
+    return build_shm_payload(parts[1], bufs, name, pool.resolve(name))
+
+
+@pytest.fixture
+def shm_pool():
+    pool = _ShmPool()
+    yield pool
+    pool.release_all()
+    assert pool.segment_count() == 0 or all(
+        s.unlinked for s in pool._segments.values())
+
+
+def test_shm_roundtrip_dtype_shape_matrix(shm_pool):
+    """Every dtype × shape that round-trips as an 'A' frame round-trips as
+    an 'S' frame, buffers resolved out of the shared segment."""
+    for dtype in _DTYPES:
+        for shape in _SHAPES:
+            arr = _make_array(dtype, shape)
+            payload = _shm_payload((b"k", arr), shm_pool)
+            assert payload[:1] == KIND_SHM
+            got, name = decode_shm_payload(payload, shm_pool.resolve)
+            shm_pool.track(name, got)
+            assert _eq(got, (b"k", arr)), (dtype, shape)
+
+
+def test_shm_multi_buffer_message(shm_pool):
+    """Several arrays in one message pack back to back into one segment."""
+    msg = ("produce_many", ("t", [(b"a", _make_array(np.float32, (8, 8))),
+                                  (b"b", _make_array(np.int16, (100,))),
+                                  (b"c", _make_array(np.float64, (3, 4)))]),
+           {"partition": 0})
+    payload = _shm_payload(msg, shm_pool)
+    got, name = decode_shm_payload(payload, shm_pool.resolve)
+    shm_pool.track(name, got)
+    assert _eq(got, msg)
+    assert shm_pool.segment_count() == 1
+
+
+def test_shm_decoded_arrays_are_writable(shm_pool):
+    payload = _shm_payload((b"k", _make_array(np.float32, (16, 16))),
+                           shm_pool)
+    got, name = decode_shm_payload(payload, shm_pool.resolve)
+    shm_pool.track(name, got)
+    arr = got[1]
+    assert arr.flags.writeable
+    arr += 1.0                             # must not raise
+
+
+_SHM_MSG = (b"key-7", _make_array(np.int32, (4, 4)), "meta")
+
+
+def test_shm_truncation_every_point_rejected(shm_pool):
+    """Cut the descriptor payload at every byte: nothing but the full
+    payload may decode (region lengths never add up on a truncation)."""
+    payload = _shm_payload(_SHM_MSG, shm_pool)
+    for cut in range(len(payload)):
+        with pytest.raises(FrameError):
+            decode_shm_payload(payload[:cut], shm_pool.resolve)
+    got, name = decode_shm_payload(payload, shm_pool.resolve)
+    shm_pool.track(name, got)
+    assert _eq(got, _SHM_MSG)
+
+
+def test_shm_frame_bit_flips_rejected(shm_pool):
+    """On the wire the frame CRC covers the whole 'S' payload — name and
+    descriptors included — so any single-bit flip is rejected at the frame
+    layer before a descriptor is ever dereferenced."""
+    payload = _shm_payload(_SHM_MSG, shm_pool)
+    frame = _HEADER.pack(MAGIC, len(payload), zlib.crc32(payload)) + payload
+    rng = np.random.default_rng(13)
+    positions = list(range(12))                    # full header + kind byte
+    positions += [int(i) for i in rng.integers(12, len(frame), 40)]
+    for byte_idx in positions:
+        corrupt = bytearray(frame)
+        corrupt[byte_idx] ^= 1 << int(rng.integers(0, 8))
+        a, b = _pair()
+        a.sendall(bytes(corrupt))
+        a.close()
+        try:
+            with pytest.raises(FrameError):
+                recv_frame(b)
+        finally:
+            b.close()
+
+
+def test_shm_descriptor_out_of_segment_rejected(shm_pool):
+    """A structurally valid descriptor pointing outside the named segment
+    is refused — a client can never make the server read foreign memory."""
+    payload = bytearray(_shm_payload(_SHM_MSG, shm_pool))
+    (name_len,) = struct.unpack_from(">H", payload, 9)
+    desc_at = 1 + 10 + name_len            # kind + _SHM_HEADER + name
+    struct.pack_into(">QQ", payload, desc_at, 1 << 40, 16)
+    with pytest.raises(FrameError, match="outside"):
+        decode_shm_payload(bytes(payload), shm_pool.resolve)
+    # offset within bounds but length running past the end: same refusal
+    struct.pack_into(">QQ", payload, desc_at, 0, 1 << 40)
+    with pytest.raises(FrameError, match="outside"):
+        decode_shm_payload(bytes(payload), shm_pool.resolve)
+
+
+def test_shm_unknown_segment_refused(shm_pool):
+    """A frame naming a segment this connection does not own is refused
+    (resolve returns None for anything outside the connection's pool)."""
+    payload = _shm_payload(_SHM_MSG, shm_pool)
+    with pytest.raises(FrameError, match="unknown segment"):
+        decode_shm_payload(payload, lambda name: None)
+
+
+def test_shm_garbage_payloads_rejected(shm_pool):
+    rng = np.random.default_rng(3)
+    for n in (0, 1, 9, 64, 400):
+        blob = bytes(rng.integers(0, 256, n, dtype=np.uint8).tolist())
+        with pytest.raises(FrameError):
+            decode_shm_payload(KIND_SHM + blob, shm_pool.resolve)
+
+
+def test_shm_kind_refused_by_plain_decode(shm_pool):
+    """decode_message (the un-negotiated path) refuses 'S' payloads: a
+    connection that never said hello cannot make the server touch shm."""
+    payload = _shm_payload(_SHM_MSG, shm_pool)
+    with pytest.raises(FrameError, match="unknown message kind"):
+        decode_message(payload)
+
+
+def test_shm_pool_recycles_when_arrays_die():
+    """Segments are pooled: once every array decoded out of a segment dies,
+    the same segment serves the next lease instead of a new allocation."""
+    pool = _ShmPool()
+    try:
+        names = set()
+        for _ in range(5):
+            payload = _shm_payload((b"k", _make_array(np.float32, (64, 64))),
+                                   pool)
+            got, name = decode_shm_payload(payload, pool.resolve)
+            pool.track(name, got)
+            names.add(name)
+            del got                        # last view dies -> refs drop to 0
+        assert len(names) == 1             # one segment, five leases
+        assert pool.segment_count() == 1
+    finally:
+        pool.release_all()
 
 
 # -- hypothesis widening -----------------------------------------------------
