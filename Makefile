@@ -5,10 +5,19 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-data test-delivery test-state test-transport test-obs test-groups test-replication test-codec bench bench-check examples deps-check
+.PHONY: test test-data test-delivery test-state test-transport test-obs test-groups test-replication test-codec test-analyze analyze lint bench bench-check examples deps-check
 
-test:           ## tier-1: full suite, stop at first failure
+test:           ## tier-1: invariant analyzer first, then the full suite, stop at first failure
+	$(PYTHON) -m tools.analyze src/ tests/
 	$(PYTHON) -m pytest -x -q
+
+analyze:        ## project invariant analyzer (docs/static_analysis.md); exit 1 on findings
+	$(PYTHON) -m tools.analyze src/ tests/
+
+lint: analyze   ## alias for analyze
+
+test-analyze:   ## the analyzer's own suite + the lock-order harness unit tests
+	$(PYTHON) -m pytest -q tests/test_analyze.py tests/test_locktrace.py
 
 test-data:      ## just the data subsystem (sources/sinks/windows/broker/durability)
 	$(PYTHON) -m pytest -q tests/test_data_sources.py tests/test_data_sinks.py \

@@ -9,7 +9,9 @@
 Prints ``name,us_per_call,derived`` CSV. Roofline numbers for the LM cells
 come from the dry-run artifacts (launch/roofline.py), not from here.
 
-``--check`` runs only the regression guards: batched ``ingest/produce_many``
+``--check`` first runs the project invariant analyzer (``tools/analyze``,
+exit 1 on findings — perf numbers from a tree violating the invariants
+are not comparable), then only the regression guards: batched ``ingest/produce_many``
 must beat per-record ``ingest/remote_transport`` on records/s, the
 parallel delivery runtime (``ingest/fanout_parallel``) must beat serial
 ``fan_out`` by >= 2x wall-clock on the metrics path with one slow sink in
@@ -29,6 +31,7 @@ raw ingest over a bandwidth-limited link by >= 2x (exit 1 on regression;
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import traceback
 
@@ -68,6 +71,18 @@ def main(argv: list[str] | None = None) -> int:
 
     print("name,us_per_call,derived")
     if args.check:
+        # guard the guards: perf numbers from a tree that violates the
+        # project invariants (docs/static_analysis.md) are not comparable
+        from tools.analyze import run as analyze_run
+        repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        findings = analyze_run([os.path.join(repo, "src"),
+                                os.path.join(repo, "tests")], root=repo)
+        for f in findings:
+            print(f"analyze,nan,FAILED: {f.format()}")
+        print(f"analyze,0,clean" if not findings
+              else f"analyze,nan,{len(findings)} finding(s)")
+        if findings:
+            return 1
         from benchmarks import bench_ingest
         return 0 if bench_ingest.check(
             min_ratio=args.check_ratio,

@@ -37,6 +37,7 @@ def render_volume(volume: np.ndarray, outdir: str, prefix: str = "tomo"
         fig.savefig(path, dpi=110, bbox_inches="tight")
         plt.close(fig)
         paths.append(path)
+    # analyze: ok swallowed-exception - best-effort matplotlib; .npy already saved
     except Exception:  # rendering must never kill the pipeline
         pass
     return paths
@@ -64,6 +65,7 @@ def render_phase(obj: np.ndarray, outdir: str, prefix: str = "ptycho"
         fig.savefig(path, dpi=110, bbox_inches="tight")
         plt.close(fig)
         paths.append(path)
-    except Exception:
+    # analyze: ok swallowed-exception - best-effort matplotlib; .npy already saved
+    except Exception:  # rendering must never kill the pipeline
         pass
     return paths

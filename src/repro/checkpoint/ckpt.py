@@ -82,9 +82,26 @@ def save(directory: str, step: int, tree: Any) -> str:
     latest_tmp = os.path.join(directory, "LATEST.tmp")
     with open(latest_tmp, "w") as f:
         f.write(os.path.basename(final))
+        # without this the rename can publish an empty/torn pointer after
+        # power loss, orphaning an otherwise-complete checkpoint
+        f.flush()
+        os.fsync(f.fileno())
     os.replace(latest_tmp, os.path.join(directory, "LATEST"))
+    _fsync_dir(directory)
     log.info("checkpoint saved: %s", final)
     return final
+
+
+def _fsync_dir(directory: str) -> None:
+    """Persist the renames themselves: step_N and LATEST are directory
+    entries, and surviving power loss needs the directory flushed too."""
+    fd = os.open(directory, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass  # some filesystems refuse directory fsync; file fsyncs hold
+    finally:
+        os.close(fd)
 
 
 def latest_step(directory: str) -> int | None:

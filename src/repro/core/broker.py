@@ -110,8 +110,9 @@ class InMemoryPartitionLog:
     """Default :class:`PartitionLog`: a locked Python list (single host)."""
 
     def __init__(self) -> None:
+        from repro.data.locktrace import new_lock
         self._records: list[Record] = []
-        self._lock = threading.Lock()
+        self._lock = new_lock("InMemoryPartitionLog._lock")
 
     def append(self, key: bytes | None, value: Any, timestamp: float) -> int:
         with self._lock:
@@ -178,9 +179,13 @@ class Broker:
         self._topic_codecs: dict[str, str] = {}
         # topic -> group -> per-partition committed offsets
         self._committed: dict[str, dict[str, list[int]]] = {}
-        self._lock = threading.Lock()
+        # lock seam (repro.data.locktrace): plain threading.Lock unless a
+        # tracing registry is enabled — the chaos suites run with traced
+        # locks and assert the acquisition graph stays acyclic
+        from repro.data.locktrace import new_lock
+        self._lock = new_lock("Broker._lock")
         self._coordinator: Any = None
-        self._coord_lock = threading.Lock()
+        self._coord_lock = new_lock("Broker._coord_lock")
         # -- HA role state (repro.data.replication) ------------------------
         # epoch is the fencing token: each failover promotes at a strictly
         # higher epoch, and a broker fenced by a higher epoch refuses writes.

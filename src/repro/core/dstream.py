@@ -582,7 +582,7 @@ class StreamingContext:
             if info is None:
                 if time.monotonic() > deadline:
                     break
-                time.sleep(self.batch_interval / 10 or 0.001)
+                time.sleep(max(self.batch_interval / 10, 0.001))
                 continue
             out.append(info)
         return out

@@ -240,7 +240,11 @@ class NearRealTimePipeline:
             if producer_done() and time.monotonic() - last_data > min(
                     idle_timeout, 10 * self.config.batch_interval):
                 break
-            time.sleep(self.config.batch_interval / 10 or 0.001)
+            # max(), not `x or 0.001`: the or-form is a truthiness test on
+            # a time value, the same 0-vs-None conflation as the PR-8
+            # deadline bugs (here it only guarded exactly-zero, so a floor
+            # says what it means)
+            time.sleep(max(self.config.batch_interval / 10, 0.001))
         return self.report
 
     # -- observability ---------------------------------------------------------

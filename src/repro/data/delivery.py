@@ -418,8 +418,9 @@ class DeliveryRuntime:
         self.broker = broker
         self._lanes: list[tuple[str, SinkLane]] = []   # (kind, lane)
         self._failure: DeliveryFailed | None = None
-        self._failure_lock = threading.Lock()
-        self._dl_lock = threading.Lock()
+        from repro.data.locktrace import new_lock  # lock seam (chaos suites)
+        self._failure_lock = new_lock("DeliveryRuntime._failure_lock")
+        self._dl_lock = new_lock("DeliveryRuntime._dl_lock")
 
     @property
     def lanes(self) -> list[SinkLane]:

@@ -139,7 +139,8 @@ class DurablePartitionLog:
         self.segment_bytes = segment_bytes
         self.fsync = fsync
         self.fsync_interval = fsync_interval
-        self._lock = threading.RLock()
+        from repro.data.locktrace import new_rlock  # lock seam (chaos suites)
+        self._lock = new_rlock("DurablePartitionLog._lock")
         # offset -> (segment id, byte position, payload length)
         self._index: list[tuple[int, int, int]] = []
         self._readers: dict[int, int] = {}   # segment id -> read fd

@@ -175,7 +175,10 @@ class GroupCoordinator:
                  clock: Callable[[], float] | None = None) -> None:
         self.broker = broker
         self._clock = clock or time.monotonic
-        self._lock = threading.RLock()
+        # lock seam: traced under the chaos suites' lock-order harness.
+        # Invariant the harness pins: coordinator -> broker, never reverse.
+        from repro.data.locktrace import new_rlock
+        self._lock = new_rlock("GroupCoordinator._lock")
         self._groups: dict[str, _Group] = {}
         self._lag_gauges: set[tuple[str, str]] = set()
         # constructor-time import: repro.data.metrics must not be imported at

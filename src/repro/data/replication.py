@@ -139,6 +139,11 @@ class ReplicaFollower:
         self._thread: threading.Thread | None = None
         self._stop = threading.Event()
         self._server = None
+        # stats lock: the pull thread writes lag/frames counters that
+        # sync_once callers and gauge scrapes read — and it doubles as the
+        # follower's seam for the chaos suites' lock-order harness
+        from repro.data.locktrace import new_lock
+        self._stats_lock = new_lock("ReplicaFollower._stats_lock")
         self._last_lag = 0
         self.frames_replicated = 0
         from repro.data.metrics import get_registry
@@ -229,8 +234,10 @@ class ReplicaFollower:
                     self._append(plog, blob, lengths)
                     synced += len(lengths)
                 lag += max(0, end - plog.end_offset())
-        self.frames_replicated += synced
-        self._last_lag = lag
+        with self._stats_lock:
+            # pull thread writes, gauge scrapes and test assertions read
+            self.frames_replicated += synced
+            self._last_lag = lag
         self._m_frames.inc(synced)
         self._m_rounds.inc()
         return synced
@@ -336,7 +343,8 @@ class FailoverBroker:
                                max_retries=max_retries,
                                retry_delay=retry_delay)
             for addr in self._addrs}
-        self._lock = threading.RLock()
+        from repro.data.locktrace import new_rlock  # lock seam (chaos suites)
+        self._lock = new_rlock("FailoverBroker._lock")
         self._pending: list[_Pending] = []
         self._nparts_cache: dict[str, int] = {}
         self._listeners: list[Callable[["FailoverBroker"], None]] = []

@@ -83,11 +83,16 @@ class KeyedSink:
                 dup = (not overwrite
                        and (key in self._seen or self._already_stored(key)))
                 self._seen.add(key)
+                if dup:
+                    self.skipped += 1
             if dup:
-                self.skipped += 1
                 continue
             self._write_one(key, value)
-            self.written += 1
+            # counter under the lock, write outside it: lanes sharing a
+            # sink race on the ints (the PR-6 MetricsSink bug), but a slow
+            # _write_one must not serialize the whole fan-out
+            with self._lock:
+                self.written += 1
             n += 1
         return n
 
@@ -123,6 +128,11 @@ class NpzDirectorySink(KeyedSink):
         tmp = path + ".tmp"
         with open(tmp, "wb") as f:
             np.savez(f, **arrays)
+            # flush+fsync before the rename, or a crash can leave `path`
+            # naming torn bytes — and _already_stored would then skip the
+            # rewrite forever (idempotence turns the corruption permanent)
+            f.flush()
+            os.fsync(f.fileno())
         os.replace(tmp, path)
 
     def keys_on_disk(self) -> list[str]:

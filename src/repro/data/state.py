@@ -171,7 +171,8 @@ class DurableStateStore:
         self.snapshot_every = snapshot_every
         self.fsync = fsync
         self.fsync_interval = fsync_interval
-        self._lock = threading.Lock()
+        from repro.data.locktrace import new_lock  # lock seam (chaos suites)
+        self._lock = new_lock("DurableStateStore._lock")
         self._last_fsync = 0.0
         self._writer: Any = None
         # last committed (ref, state): the delta base, and what compaction

@@ -1,0 +1,36 @@
+"""Shared fixtures: the lock-order harness for the chaos suites.
+
+For the delivery, groups, and replication chaos suites every
+``Broker`` / ``DeliveryRuntime`` / ``GroupCoordinator`` /
+``ReplicaFollower`` / durable-log/store constructed during the test takes
+traced locks (``repro.data.locktrace``), and teardown asserts the
+recorded acquisition graph has no cycle — the documented coordinator →
+broker lock order (and every other ordering the suites exercise) is
+machine-checked on each run, not just asserted in a docstring.
+
+Set ``REPRO_LOCKTRACE=0`` to opt out (used to A/B the harness's wall-time
+overhead; the acceptance bar is <= 1.1x, measured ~1.0x since these
+suites are sleep/IO dominated).
+"""
+import os
+
+import pytest
+
+_TRACED_SUITES = {"test_delivery", "test_groups", "test_replication"}
+
+
+@pytest.fixture(autouse=True)
+def lock_order_harness(request):
+    if (request.module.__name__ not in _TRACED_SUITES
+            or os.environ.get("REPRO_LOCKTRACE") == "0"):
+        yield
+        return
+    from repro.data import locktrace
+    locktrace.enable()
+    try:
+        yield
+    finally:
+        report = locktrace.disable().report()
+    assert not report.cycles, (
+        "lock-order cycles detected (potential deadlock):\n"
+        + report.describe())

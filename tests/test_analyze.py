@@ -1,0 +1,499 @@
+"""The invariant analyzer, tested on itself: positive / negative /
+suppressed fixtures per rule, plus a seeded corpus reproducing the PR-6
+and PR-8 bugs verbatim from this repo's git history — re-introducing
+either bug class must turn the exit code non-zero.
+"""
+import json
+import textwrap
+
+import pytest
+
+from tools.analyze import RULES, run
+from tools.analyze.__main__ import main as cli_main
+
+
+def findings_for(tmp_path, code, name="snippet.py", select=None, root=None):
+    path = tmp_path / name
+    path.write_text(textwrap.dedent(code))
+    return run([str(path)], select=select, root=str(root or tmp_path))
+
+
+def rules_hit(findings):
+    return {f.rule for f in findings}
+
+
+def test_rule_registry_complete():
+    assert {"deadline-truthiness", "lock-discipline",
+            "replace-without-fsync", "transport-op-parity",
+            "metric-catalog-drift", "swallowed-exception"} <= set(RULES)
+
+
+# -- deadline-truthiness -----------------------------------------------------
+
+def test_deadline_truthiness_positive(tmp_path):
+    fs = findings_for(tmp_path, """\
+        import time
+
+        def wait(timeout=None):
+            if timeout:
+                deadline = time.monotonic() + timeout
+            while timeout or True:
+                pass
+        """)
+    assert [f.line for f in fs if f.rule == "deadline-truthiness"] == [4, 6]
+
+
+def test_deadline_truthiness_tracks_assignment(tmp_path):
+    fs = findings_for(tmp_path, """\
+        import time
+
+        def wait(timeout):
+            deadline = (time.monotonic() + timeout) if timeout else None
+            if deadline and time.monotonic() > deadline:
+                return True
+        """)
+    # the ternary test and both tainted uses (`deadline` as an `and`
+    # operand counts once; line 4's `if timeout` ternary is one finding)
+    lines = [f.line for f in fs if f.rule == "deadline-truthiness"]
+    assert 4 in lines and 5 in lines
+
+
+def test_deadline_truthiness_negative(tmp_path):
+    fs = findings_for(tmp_path, """\
+        import time
+
+        def wait(timeout=None, interval=1.0):
+            deadline = (time.monotonic() + timeout) if timeout is not None \\
+                else None
+            if deadline is not None and time.monotonic() > deadline:
+                return True
+            if interval > 0.5:
+                return False
+            dead = [x for x in range(3) if x > timeout]
+            if dead:                       # a list, not a time value
+                return None
+            changed = deadline != interval  # a bool, not a time value
+            if changed:
+                return None
+        """)
+    assert "deadline-truthiness" not in rules_hit(fs)
+
+
+def test_deadline_truthiness_suppressed(tmp_path):
+    fs = findings_for(tmp_path, """\
+        def wait(timeout):
+            # analyze: ok deadline-truthiness - timeout here is a bool flag
+            if timeout:
+                return 1
+        """)
+    assert "deadline-truthiness" not in rules_hit(fs)
+
+
+# -- lock-discipline ---------------------------------------------------------
+
+def test_lock_discipline_guarded_somewhere_guarded_everywhere(tmp_path):
+    fs = findings_for(tmp_path, """\
+        import threading
+
+        class Counter:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.n = 0          # __init__ writes are exempt
+
+            def inc(self):
+                with self._lock:
+                    self.n += 1
+
+            def reset(self):
+                self.n = 0          # bare write: flagged
+        """)
+    assert [f.line for f in fs if f.rule == "lock-discipline"] == [13]
+
+
+def test_lock_discipline_locked_helper_fixpoint(tmp_path):
+    fs = findings_for(tmp_path, """\
+        import threading
+
+        class Log:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.entries = []
+                self._recover()     # __init__ call sites count as held
+
+            def append(self, x):
+                with self._lock:
+                    self.entries.append(x)
+                    self._roll()
+
+            def _roll(self):
+                self.entries = self.entries[-10:]   # caller holds the lock
+
+            def _recover(self):
+                self.entries = []
+        """)
+    assert "lock-discipline" not in rules_hit(fs)
+
+
+def test_lock_discipline_sink_counter_clause(tmp_path):
+    fs = findings_for(tmp_path, """\
+        class BareSink:
+            def write_batch(self, items):
+                self.items += len(items)
+                return 0
+        """)
+    assert [f.line for f in fs if f.rule == "lock-discipline"] == [3]
+
+
+def test_lock_discipline_suppressed(tmp_path):
+    fs = findings_for(tmp_path, """\
+        import threading
+
+        class Counter:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.n = 0
+
+            def inc(self):
+                with self._lock:
+                    self.n += 1
+
+            def reset_before_start(self):
+                # analyze: ok lock-discipline - called before threads spawn
+                self.n = 0
+        """)
+    assert "lock-discipline" not in rules_hit(fs)
+
+
+# -- replace-without-fsync ---------------------------------------------------
+
+def test_replace_without_fsync_positive(tmp_path):
+    fs = findings_for(tmp_path, """\
+        import os
+
+        def save(path, data):
+            with open(path + ".tmp", "w") as f:
+                f.write(data)
+            os.replace(path + ".tmp", path)
+        """)
+    assert [f.line for f in fs if f.rule == "replace-without-fsync"] == [6]
+
+
+def test_replace_without_fsync_negative(tmp_path):
+    fs = findings_for(tmp_path, """\
+        import os
+
+        def save(path, data, fsync="always"):
+            with open(path + ".tmp", "w") as f:
+                f.write(data)
+                f.flush()
+                if fsync != "never":    # policy conditional still counts
+                    os.fsync(f.fileno())
+            os.replace(path + ".tmp", path)
+        """)
+    assert "replace-without-fsync" not in rules_hit(fs)
+
+
+def test_replace_without_fsync_sequences_partition_a_function(tmp_path):
+    # first rename is safe, the second write-rename sequence forgot both
+    fs = findings_for(tmp_path, """\
+        import os
+
+        def save(path, data):
+            with open(path + ".tmp", "w") as f:
+                f.write(data)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(path + ".tmp", path)
+            with open(path + ".ptr.tmp", "w") as f:
+                f.write(path)
+            os.replace(path + ".ptr.tmp", path + ".ptr")
+        """)
+    assert [f.line for f in fs if f.rule == "replace-without-fsync"] == [11]
+
+
+def test_replace_without_fsync_suppressed(tmp_path):
+    fs = findings_for(tmp_path, """\
+        import os
+
+        def shuffle(a, b):
+            # analyze: ok replace-without-fsync - same-process visibility only
+            os.replace(a, b)
+        """)
+    assert "replace-without-fsync" not in rules_hit(fs)
+
+
+# -- transport-op-parity -----------------------------------------------------
+
+_TRANSPORT_FIXTURE = """\
+import socket
+
+_OPS = frozenset({{"produce", "read", "ping"{extra_allow}}})
+
+
+class BrokerServer:
+    def _dispatch(self, op, args, kwargs):
+        if op == "ping":
+            return "pong"
+        if op == {special!r}:
+            return None
+        if op not in _OPS:
+            raise ValueError(op)
+        return getattr(self.broker, op)(*args, **kwargs)
+
+
+class RemoteBroker:
+    def _request(self, op, *args, **kwargs):
+        return (op, args, kwargs)
+
+    def produce(self, topic, value):
+        return self._request("produce", topic, value)
+
+    def read(self, rng):
+        return self._request("read", rng)
+
+    def ping(self):
+        return self._request("ping") == "pong"
+{extra_client}"""
+
+
+def _transport_fixture(tmp_path, *, extra_allow="", special="ping",
+                       extra_client=""):
+    return findings_for(
+        tmp_path,
+        _TRANSPORT_FIXTURE.format(extra_allow=extra_allow, special=special,
+                                  extra_client=extra_client),
+        name="transport.py")
+
+
+def test_transport_parity_clean(tmp_path):
+    assert "transport-op-parity" not in rules_hit(_transport_fixture(tmp_path))
+
+
+def test_transport_parity_client_issues_unlisted_op(tmp_path):
+    fs = _transport_fixture(tmp_path, extra_client=(
+        "\n    def fence(self, epoch):\n"
+        "        return self._request(\"fence\", epoch)\n"))
+    msgs = [f.message for f in fs if f.rule == "transport-op-parity"]
+    assert any("`fence`" in m and "allow-list" in m for m in msgs)
+
+
+def test_transport_parity_allowlisted_op_without_issuer(tmp_path):
+    fs = _transport_fixture(tmp_path, extra_allow=', "promote"')
+    msgs = [f.message for f in fs if f.rule == "transport-op-parity"]
+    assert any("`promote`" in m and "no RemoteBroker method" in m
+               for m in msgs)
+
+
+def test_transport_parity_server_special_op_not_allowlisted(tmp_path):
+    fs = _transport_fixture(tmp_path, special="stats")
+    msgs = [f.message for f in fs if f.rule == "transport-op-parity"]
+    assert any("`stats`" in m and "BrokerServer" in m for m in msgs)
+
+
+# -- metric-catalog-drift ----------------------------------------------------
+
+def _metric_tree(tmp_path, code_metric, doc_metric):
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "docs" / "observability.md").write_text(textwrap.dedent(f"""\
+        # Observability
+
+        ## Metric catalog
+
+        | Name | Kind | Meaning |
+        |------|------|---------|
+        | `{doc_metric}` | counter | something |
+
+        ## Other section
+
+        | `not_a_metric_ref` | mentioned outside the catalog |
+        """))
+    pkg = tmp_path / "src" / "repro" / "data"
+    pkg.mkdir(parents=True)
+    (pkg / "layer.py").write_text(textwrap.dedent(f"""\
+        def build(reg):
+            return reg.counter("{code_metric}", "help text")
+        """))
+    return run([str(tmp_path / "src")], root=str(tmp_path))
+
+
+def test_metric_catalog_in_sync(tmp_path):
+    fs = _metric_tree(tmp_path, "ingest_polls_total", "ingest_polls_total")
+    assert "metric-catalog-drift" not in rules_hit(fs)
+
+
+def test_metric_catalog_missing_doc(tmp_path):
+    fs = _metric_tree(tmp_path, "ingest_polls_total", "something_else")
+    msgs = [f.message for f in fs if f.rule == "metric-catalog-drift"]
+    assert any("`ingest_polls_total`" in m and "missing from" in m
+               for m in msgs)
+    assert any("`something_else`" in m and "nothing under src/repro/"
+               in m for m in msgs)
+
+
+# -- swallowed-exception -----------------------------------------------------
+
+def test_swallowed_exception_positive(tmp_path):
+    fs = findings_for(tmp_path, """\
+        def f():
+            try:
+                risky()
+            except:
+                pass
+
+        def g():
+            try:
+                risky()
+            except Exception:
+                pass
+        """)
+    assert [f.line for f in fs if f.rule == "swallowed-exception"] == [4, 10]
+
+
+def test_swallowed_exception_negative(tmp_path):
+    fs = findings_for(tmp_path, """\
+        def f(log):
+            try:
+                risky()
+            except OSError:
+                pass                      # narrow type: fine
+            try:
+                risky()
+            except Exception as e:
+                log.warning("boom: %s", e)  # handled: fine
+        """)
+    assert "swallowed-exception" not in rules_hit(fs)
+
+
+def test_swallowed_exception_suppressed(tmp_path):
+    fs = findings_for(tmp_path, """\
+        def f():
+            try:
+                risky()
+            # analyze: ok swallowed-exception - teardown best-effort
+            except Exception:
+                pass
+        """)
+    assert "swallowed-exception" not in rules_hit(fs)
+
+
+# -- seeded corpus: the shipped bugs, verbatim from git history --------------
+
+# PR 8 (commit 851d42c) swept this out of IngestRunner.run_inline — the
+# pre-fix hunk, verbatim: timeout=0 meant "wait forever".
+PR8_RUN_INLINE_BUG = '''\
+import time
+
+class IngestRunner:
+    def run_inline(self, timeout=None):
+        """Pump until every source is exhausted (tests/benchmarks)."""
+        deadline = (time.monotonic() + timeout) if timeout else None
+        while not self.done:
+            if self.pump() == 0:
+                if deadline and time.monotonic() > deadline:
+                    return
+'''
+
+# PR 6 (commit 10e1a65) added MetricsSink's lock — the pre-fix class,
+# verbatim: observe() and write_batch() raced from delivery-lane threads.
+PR6_METRICS_SINK_BUG = '''\
+class MetricsSink:
+    def __init__(self):
+        self.batches = 0
+        self.records = 0
+        self.items = 0
+        self.latencies = []
+
+    def observe(self, info):
+        self.batches += 1
+        self.records += info.num_records
+        self.latencies.append(info.processing_time)
+
+    __call__ = observe
+
+    def write_batch(self, items):
+        self.items += len(items)
+        return 0
+
+    def report(self):
+        if not self.latencies:
+            return {"batches": 0, "records": 0, "items": self.items}
+'''
+
+
+def test_seeded_pr8_deadline_bug_detected(tmp_path):
+    fs = findings_for(tmp_path, PR8_RUN_INLINE_BUG)
+    lines = [f.line for f in fs if f.rule == "deadline-truthiness"]
+    assert 6 in lines      # `if timeout else None`
+    assert 9 in lines      # `if deadline and ...`
+
+
+def test_seeded_pr6_metrics_sink_bug_detected(tmp_path):
+    fs = findings_for(tmp_path, PR6_METRICS_SINK_BUG)
+    lines = [f.line for f in fs if f.rule == "lock-discipline"]
+    assert lines, "the PR-6 MetricsSink race must be flagged"
+    assert 16 in lines     # write_batch counter
+
+
+def test_reintroducing_the_fix_reverts_to_nonzero_exit(tmp_path, capsys):
+    """Acceptance demo: fixture copies of the current (fixed) sources are
+    clean; reverting a PR-8 deadline fix flips the CLI exit non-zero."""
+    fixed = tmp_path / "fixed.py"
+    fixed.write_text(textwrap.dedent("""\
+        import time
+
+        def run_inline(self, timeout=None):
+            deadline = (time.monotonic() + timeout) \\
+                if timeout is not None else None
+            while not self.done:
+                if deadline is not None and time.monotonic() > deadline:
+                    return
+        """))
+    assert cli_main([str(fixed), "--root", str(tmp_path)]) == 0
+
+    reverted = tmp_path / "reverted.py"
+    reverted.write_text(PR8_RUN_INLINE_BUG)
+    assert cli_main([str(reverted), "--root", str(tmp_path)]) == 1
+
+
+# -- CLI ---------------------------------------------------------------------
+
+def test_cli_json_output(tmp_path, capsys):
+    bad = tmp_path / "bad.py"
+    bad.write_text("def f(timeout):\n    if timeout:\n        pass\n")
+    rc = cli_main([str(bad), "--json", "--root", str(tmp_path)])
+    payload = json.loads(capsys.readouterr().out)
+    assert rc == 1
+    assert payload["count"] == 1
+    f = payload["findings"][0]
+    assert (f["rule"], f["line"]) == ("deadline-truthiness", 2)
+    assert f["path"].endswith("bad.py")
+
+
+def test_cli_select_and_unknown_rule(tmp_path, capsys):
+    bad = tmp_path / "bad.py"
+    bad.write_text("def f(timeout):\n    if timeout:\n        pass\n")
+    assert cli_main([str(bad), "--select", "swallowed-exception",
+                     "--root", str(tmp_path)]) == 0
+    assert cli_main([str(bad), "--select", "no-such-rule"]) == 2
+    capsys.readouterr()
+
+
+def test_cli_list_rules(capsys):
+    assert cli_main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rule in RULES:
+        assert rule in out
+
+
+def test_syntax_error_is_a_finding(tmp_path):
+    fs = findings_for(tmp_path, "def broken(:\n")
+    assert rules_hit(fs) == {"syntax-error"}
+
+
+# -- the real tree stays clean ----------------------------------------------
+
+def test_repo_tree_is_clean():
+    """`make analyze` parity: the shipped sources carry no findings (any
+    intentional pattern is suppressed in place, with a reason)."""
+    fs = run(["src", "tools"], root=".")
+    assert fs == [], "\n".join(f.format() for f in fs)

@@ -1,0 +1,242 @@
+"""Unit suite for the runtime lock-order harness (repro.data.locktrace):
+cycle detection on a scripted AB/BA interleaving, no false positive for
+consistent ordering, RLock reentrancy, blocking-call hazards, and the
+enable/disable switchboard the conftest fixture relies on.
+"""
+import queue
+import socket
+import threading
+
+import pytest
+
+from repro.data import locktrace
+from repro.data.locktrace import LockRegistry, TracingLock
+
+
+@pytest.fixture()
+def registry():
+    return LockRegistry()
+
+
+def _run_threads(*targets):
+    threads = [threading.Thread(target=t) for t in targets]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=10)
+        assert not t.is_alive()
+
+
+# -- cycle detection ---------------------------------------------------------
+
+def test_ab_ba_interleaving_reports_cycle(registry):
+    """Two threads nest A/B in opposite orders. The run itself never
+    deadlocks (events serialize it) — the *graph* still has the cycle."""
+    a = TracingLock("A", registry)
+    b = TracingLock("B", registry)
+    first_done = threading.Event()
+
+    def ab():
+        with a:
+            with b:
+                pass
+        first_done.set()
+
+    def ba():
+        first_done.wait(10)
+        with b:
+            with a:
+                pass
+
+    _run_threads(ab, ba)
+    rep = registry.report()
+    assert rep.cycles == [["A", "B"]]
+    assert ("A", "B") in rep.edges and ("B", "A") in rep.edges
+    assert "cycle: A -> B -> A" in rep.describe()
+
+
+def test_consistent_order_is_not_a_cycle(registry):
+    a = TracingLock("A", registry)
+    b = TracingLock("B", registry)
+
+    def ab():
+        for _ in range(50):
+            with a:
+                with b:
+                    pass
+
+    _run_threads(ab, ab, ab)
+    rep = registry.report()
+    assert rep.cycles == []
+    assert set(rep.edges) == {("A", "B")}
+    assert rep.locks == {"A", "B"}
+
+
+def test_three_lock_cycle(registry):
+    a = TracingLock("A", registry)
+    b = TracingLock("B", registry)
+    c = TracingLock("C", registry)
+    for first, second in ((a, b), (b, c), (c, a)):
+        with first:
+            with second:
+                pass
+    assert registry.cycles() == [["A", "B", "C"]]
+
+
+def test_edge_records_first_call_site(registry):
+    a = TracingLock("A", registry)
+    b = TracingLock("B", registry)
+    with a:
+        with b:
+            pass
+    site = registry.report().edges[("A", "B")]
+    assert "test_locktrace.py" in site
+
+
+# -- reentrancy and release pairing ------------------------------------------
+
+def test_rlock_reentrant_acquire_is_not_a_self_edge(registry):
+    a = TracingLock("A", registry, reentrant=True)
+    b = TracingLock("B", registry)
+    with a:
+        with a:          # reentrant: pushes, but must not edge A -> A
+            with b:      # innermost holder is still A: edge A -> B
+                pass
+        assert a.locked()
+    assert not a.locked()
+    rep = registry.report()
+    assert set(rep.edges) == {("A", "B")}
+    assert rep.cycles == []
+
+
+def test_release_pairs_by_identity_not_order(registry):
+    # hand-over-hand: acquire A, acquire B, release A, release B
+    a = TracingLock("A", registry)
+    b = TracingLock("B", registry)
+    a.acquire()
+    b.acquire()
+    a.release()
+    with TracingLock("C", registry):  # holder should now be B, not A
+        pass
+    b.release()
+    assert set(registry.report().edges) == {("A", "B"), ("B", "C")}
+
+
+def test_failed_nonblocking_acquire_records_nothing(registry):
+    a = TracingLock("A", registry)
+    b = TracingLock("B", registry)
+
+    def hold_then_signal(acquired, release):
+        b.acquire()
+        acquired.set()
+        release.wait(10)
+        b.release()
+
+    acquired, release = threading.Event(), threading.Event()
+    t = threading.Thread(target=hold_then_signal, args=(acquired, release))
+    t.start()
+    acquired.wait(10)
+    with a:
+        assert b.acquire(blocking=False) is False
+    release.set()
+    t.join(10)
+    assert registry.report().edges == {}
+
+
+def test_locked_probe_both_flavors(registry):
+    for reentrant in (False, True):
+        lk = TracingLock(f"L{reentrant}", registry, reentrant=reentrant)
+        assert not lk.locked()
+        with lk:
+            assert lk.locked()
+        assert not lk.locked()
+
+
+# -- switchboard and hazard probes -------------------------------------------
+
+def test_new_lock_plain_when_disabled():
+    assert locktrace.active() is None
+    lk, rlk = locktrace.new_lock("x"), locktrace.new_rlock("y")
+    assert not isinstance(lk, TracingLock)
+    assert not isinstance(rlk, TracingLock)
+    with lk, rlk:
+        pass
+
+
+def test_new_lock_traced_when_enabled():
+    with locktrace.tracing() as reg:
+        lk = locktrace.new_lock("Demo._lock")
+        rlk = locktrace.new_rlock("Demo._rlock")
+        assert isinstance(lk, TracingLock) and not lk.reentrant
+        assert isinstance(rlk, TracingLock) and rlk.reentrant
+        assert locktrace.active() is reg
+    assert locktrace.active() is None
+    assert reg.report().locks == {"Demo._lock", "Demo._rlock"}
+
+
+def test_enable_twice_raises():
+    with locktrace.tracing():
+        with pytest.raises(RuntimeError, match="already enabled"):
+            locktrace.enable()
+    with pytest.raises(RuntimeError, match="not enabled"):
+        locktrace.disable()
+
+
+def test_queue_get_hazard_only_while_holding():
+    q = queue.Queue()
+    q.put(1)
+    q.put(2)
+    with locktrace.tracing() as reg:
+        lk = locktrace.new_lock("Holder._lock")
+        q.get()                      # not holding anything: no hazard
+        with lk:
+            q.get()                  # blocking forever while holding
+            q.put(3)
+            q.get(timeout=1)         # bounded wait: fine
+    hazards = reg.report().hazards
+    assert len(hazards) == 1
+    assert hazards[0].held == ("Holder._lock",)
+    assert hazards[0].call == "queue.Queue.get(timeout=None)"
+    assert "test_locktrace.py" in hazards[0].site
+
+
+def test_socket_recv_hazard():
+    left, right = socket.socketpair()
+    try:
+        right.sendall(b"ping")
+        with locktrace.tracing() as reg:
+            lk = locktrace.new_lock("Conn._lock")
+            with lk:
+                left.settimeout(None)
+                assert left.recv(4) == b"ping"
+            right.sendall(b"pong")
+            left.settimeout(5.0)
+            with lk:
+                assert left.recv(4) == b"pong"   # bounded: no hazard
+        hazards = reg.report().hazards
+        assert [h.call for h in hazards] == ["socket.recv(timeout=None)"]
+    finally:
+        left.close()
+        right.close()
+
+
+def test_disable_restores_patches():
+    orig_get = queue.Queue.get
+    orig_recv = socket.socket.recv
+    with locktrace.tracing():
+        assert queue.Queue.get is not orig_get
+        assert socket.socket.recv is not orig_recv
+    assert queue.Queue.get is orig_get
+    assert socket.socket.recv is orig_recv
+
+
+# -- integration: the production seams record real component locks -----------
+
+def test_broker_seam_records_named_locks():
+    with locktrace.tracing() as reg:
+        from repro.core.broker import Broker
+        broker = Broker()
+        broker.create_topic("t", partitions=1)
+        broker.produce("t", b"x")
+    assert {"Broker._lock", "InMemoryPartitionLog._lock"} <= reg.report().locks
+    assert reg.report().cycles == []

@@ -636,3 +636,60 @@ def test_ingest_add_tolerates_create_race():
     runner.add(SyntheticRateSource(rate=1e9, total=1), IngestConfig(topic="t"))
     runner.add(SyntheticRateSource(rate=1e9, total=1), IngestConfig(topic="t"))
     assert Broker.topics(broker) == ["t"]
+
+
+# -- op allow-list parity ----------------------------------------------------
+
+def test_op_allowlist_parity():
+    """Runtime complement to the static `transport-op-parity` rule: the
+    _OPS allow-list, the server dispatch, and RemoteBroker's public
+    surface must describe the same protocol — checked against the live
+    objects, so ops built or decorated dynamically still count."""
+    import inspect
+
+    from repro.data import transport as t
+
+    # ops the transport itself answers without touching the broker
+    server_local = {"ping", "stats", "hello", "shm_alloc"}
+    # connection internals issued by _connect/_send_shm, not a public method
+    connection_internal = {"hello", "shm_alloc"}
+
+    # every broker-bound op in _OPS is a real callable on Broker — the
+    # server's getattr(self.broker, op) can never fall over
+    for op in sorted(t._OPS - server_local):
+        assert callable(getattr(t.Broker, op, None)), (
+            f"allow-listed op {op!r} is not a Broker method")
+
+    # drive every public RemoteBroker method against a recording stub and
+    # diff the ops it issues against the allow-list
+    rb = t.RemoteBroker.__new__(t.RemoteBroker)
+    issued: set[str] = set()
+    rb._request = lambda op, *a, **k: issued.add(op)
+
+    dummy = {"rng": t.OffsetRange("t", 0, 0, 0), "pairs": [],
+             "topics": ["t"], "cursors": {}, "hwms": {}}
+
+    def arg_for(param):
+        if param.name in dummy:
+            return dummy[param.name]
+        if param.annotation in (int, "int"):
+            return 0
+        return "x"
+
+    public = [name for name, fn in vars(t.RemoteBroker).items()
+              if inspect.isfunction(fn) and not name.startswith("_")
+              and name != "close"]
+    for name in public:
+        fn = getattr(rb, name)
+        sig = inspect.signature(fn)
+        args = [arg_for(p) for p in sig.parameters.values()
+                if p.default is inspect.Parameter.empty
+                and p.kind in (p.POSITIONAL_ONLY,
+                               p.POSITIONAL_OR_KEYWORD)]
+        fn(*args)
+
+    unlisted = issued - t._OPS
+    assert not unlisted, f"RemoteBroker issues ops outside _OPS: {unlisted}"
+    uncovered = t._OPS - issued - connection_internal
+    assert not uncovered, (
+        f"allow-listed ops with no public RemoteBroker issuer: {uncovered}")

@@ -430,6 +430,7 @@ def _fire_to_dir(out_dir):
         tmp = os.path.join(out_dir, f".win-{winfo.index:04d}.tmp")
         with open(tmp, "w") as f:
             json.dump(records, f)
+        # analyze: ok replace-without-fsync - atomicity vs the reader below, not crash durability
         os.replace(tmp, os.path.join(out_dir, f"win-{winfo.index:04d}.json"))
     return fn
 

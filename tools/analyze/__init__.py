@@ -1,0 +1,13 @@
+"""Project invariant analyzer: AST lint passes grounded in shipped bugs.
+
+Usage: ``python -m tools.analyze src/ tests/`` — exits non-zero on
+findings. Rule catalog and suppression syntax: ``docs/static_analysis.md``.
+"""
+from tools.analyze.core import (Finding, Project, RULES, Source, render,
+                                run)
+
+# importing a checker module registers its rule(s)
+from tools.analyze import (deadline, exceptions, fsync, locks,  # noqa: F401
+                           metrics_catalog, transport_ops)
+
+__all__ = ["Finding", "Project", "RULES", "Source", "render", "run"]

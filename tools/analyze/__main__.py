@@ -1,0 +1,54 @@
+"""CLI for the project invariant analyzer.
+
+    python -m tools.analyze src/ tests/           # text, exit 1 on findings
+    python -m tools.analyze --json src/           # machine-readable
+    python -m tools.analyze --select lock-discipline src/repro/data/
+    python -m tools.analyze --list-rules
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from tools.analyze import RULES, render, run
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.analyze",
+        description="project-specific static analysis (docs/static_analysis.md)")
+    ap.add_argument("paths", nargs="*", default=["src", "tests"],
+                    help="files/directories to analyze (default: src tests)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit findings as JSON (per file:line, for CI "
+                         "annotation)")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated rule names to run (default: all)")
+    ap.add_argument("--root", default=".",
+                    help="repo root for docs lookups (default: cwd)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for name, checker in sorted(RULES.items()):
+            print(f"{name:24s} {checker.description}")
+        return 0
+
+    select = None
+    if args.select:
+        select = {s.strip() for s in args.select.split(",") if s.strip()}
+        unknown = select - set(RULES)
+        if unknown:
+            print(f"unknown rule(s): {', '.join(sorted(unknown))}",
+                  file=sys.stderr)
+            return 2
+
+    paths = args.paths or ["src", "tests"]
+    findings = run(paths, select=select, root=args.root)
+    print(render(findings, as_json=args.json))
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

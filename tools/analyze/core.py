@@ -1,0 +1,223 @@
+"""Core of the project invariant analyzer: findings, suppressions, registry.
+
+The analyzer is deliberately project-specific — every rule descends from a
+bug this repo actually shipped and then fixed by hand (see
+docs/static_analysis.md for the lineage). Checkers are stdlib-``ast`` only;
+nothing here imports the code under analysis.
+
+Two checker shapes:
+
+- per-file: subclass :class:`Checker`, implement ``check(src)`` — called
+  once per parsed source file;
+- project-wide: subclass :class:`ProjectChecker`, implement
+  ``check_project(project)`` — called once with every parsed file, for
+  rules that cross files (transport-op parity, metric-catalog drift).
+
+Suppressions: ``# analyze: ok <rule>[, <rule>...]`` on the finding's line
+(or the line directly above it) silences those rules there; the ``ok-file``
+variant anywhere in the file silences the rules for the whole file. Always
+pair a suppression with a comment saying *why* the pattern is intentional.
+"""
+from __future__ import annotations
+
+import ast
+import io
+import json
+import os
+import re
+import tokenize
+from dataclasses import asdict, dataclass, field
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: [{self.rule}] {self.message}"
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+
+_SUPPRESS_RE = re.compile(
+    r"analyze:\s*ok(?P<scope>-file)?\s*[:=]?\s*(?P<rules>[a-z0-9\-_]+(?:\s*,\s*[a-z0-9\-_]+)*)")
+
+
+class Source:
+    """One parsed Python file: AST + suppression table."""
+
+    def __init__(self, path: str, text: str) -> None:
+        self.path = path
+        self.text = text
+        self.tree = ast.parse(text, filename=path)
+        self.line_ok: dict[int, set[str]] = {}
+        self.file_ok: set[str] = set()
+        self._scan_comments(text)
+
+    def _scan_comments(self, text: str) -> None:
+        try:
+            tokens = tokenize.generate_tokens(io.StringIO(text).readline)
+            for tok in tokens:
+                if tok.type != tokenize.COMMENT:
+                    continue
+                m = _SUPPRESS_RE.search(tok.string)
+                if not m:
+                    continue
+                rules = {r.strip() for r in m.group("rules").split(",")}
+                if m.group("scope"):
+                    self.file_ok |= rules
+                else:
+                    self.line_ok.setdefault(tok.start[0], set()).update(rules)
+        except tokenize.TokenError:
+            pass
+
+    def suppressed(self, rule: str, line: int) -> bool:
+        if rule in self.file_ok:
+            return True
+        for at in (line, line - 1):
+            if rule in self.line_ok.get(at, ()):  # comment on or above the line
+                return True
+        return False
+
+
+class Project:
+    """Every parsed source plus the repo root (for docs lookups)."""
+
+    def __init__(self, sources: list[Source], root: str = ".") -> None:
+        self.sources = sources
+        self.root = root
+
+    def find(self, suffix: str) -> list[Source]:
+        norm = suffix.replace(os.sep, "/")
+        return [s for s in self.sources
+                if s.path.replace(os.sep, "/").endswith(norm)]
+
+
+class Checker:
+    """Per-file rule. ``name`` is the rule id used in suppressions."""
+
+    name = ""
+    description = ""
+
+    def check(self, src: Source):  # pragma: no cover - interface
+        raise NotImplementedError
+        yield
+
+
+class ProjectChecker(Checker):
+    """Cross-file rule: sees the whole project at once."""
+
+    def check(self, src: Source):
+        return ()
+
+    def check_project(self, project: Project):  # pragma: no cover - interface
+        raise NotImplementedError
+        yield
+
+
+RULES: dict[str, Checker] = {}
+
+
+def register(cls: type) -> type:
+    inst = cls()
+    assert inst.name and inst.name not in RULES, f"bad rule {cls}"
+    RULES[inst.name] = inst
+    return cls
+
+
+# -- file walking -----------------------------------------------------------
+
+_SKIP_DIRS = {"__pycache__", ".git", ".pytest_cache", "node_modules",
+              ".claude"}
+
+
+def iter_py_files(paths: list[str]):
+    for path in paths:
+        if os.path.isfile(path):
+            if path.endswith(".py"):
+                yield path
+            continue
+        for dirpath, dirnames, filenames in os.walk(path):
+            dirnames[:] = sorted(d for d in dirnames if d not in _SKIP_DIRS
+                                 and not d.startswith("."))
+            for fn in sorted(filenames):
+                if fn.endswith(".py"):
+                    yield os.path.join(dirpath, fn)
+
+
+def load_sources(paths: list[str]) -> tuple[list[Source], list[Finding]]:
+    sources, errors = [], []
+    for path in iter_py_files(paths):
+        try:
+            with open(path, encoding="utf-8") as f:
+                text = f.read()
+            sources.append(Source(path, text))
+        except (SyntaxError, UnicodeDecodeError) as e:
+            line = getattr(e, "lineno", 1) or 1
+            errors.append(Finding("syntax-error", path, line, 0, str(e)))
+    return sources, errors
+
+
+def run(paths: list[str], select: set[str] | None = None,
+        root: str = ".") -> list[Finding]:
+    """Run every registered checker over ``paths``; returns surviving
+    (non-suppressed) findings sorted by location."""
+    sources, findings = load_sources(paths)
+    project = Project(sources, root=root)
+    by_path = {s.path: s for s in sources}
+    checkers = [c for n, c in sorted(RULES.items())
+                if select is None or n in select]
+    for checker in checkers:
+        raw = []
+        for src in sources:
+            raw.extend(checker.check(src))
+        if isinstance(checker, ProjectChecker):
+            raw.extend(checker.check_project(project))
+        for f in raw:
+            src = by_path.get(f.path)
+            if src is not None and src.suppressed(f.rule, f.line):
+                continue
+            findings.append(f)
+    return sorted(findings, key=lambda f: (f.path, f.line, f.col, f.rule))
+
+
+def render(findings: list[Finding], as_json: bool = False) -> str:
+    if as_json:
+        return json.dumps({"findings": [f.to_dict() for f in findings],
+                           "count": len(findings)}, indent=2)
+    lines = [f.format() for f in findings]
+    lines.append(f"{len(findings)} finding(s)" if findings
+                 else "analyze: clean")
+    return "\n".join(lines)
+
+
+# -- small AST helpers shared by checkers -----------------------------------
+
+def dotted_self_path(node: ast.AST) -> str | None:
+    """``self.a.b`` -> ``"self.a.b"``; None when the chain's base isn't
+    the name ``self``."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name) and node.id == "self":
+        return ".".join(["self"] + list(reversed(parts)))
+    return None
+
+
+def call_name(node: ast.Call) -> str | None:
+    """Fully dotted callable name: ``os.replace(...)`` -> ``"os.replace"``."""
+    func = node.func
+    parts = []
+    while isinstance(func, ast.Attribute):
+        parts.append(func.attr)
+        func = func.value
+    if isinstance(func, ast.Name):
+        parts.append(func.id)
+        return ".".join(reversed(parts))
+    return None

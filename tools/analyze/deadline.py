@@ -1,0 +1,147 @@
+"""deadline-truthiness: a timeout of 0 must not behave like "no timeout".
+
+PR 8 swept exactly this bug out of groups/ingest/delivery/dstream:
+
+    deadline = (time.monotonic() + timeout) if timeout else None
+    ...
+    if deadline and time.monotonic() > deadline:
+
+``timeout=0`` (meaning "give up immediately") is falsy, so both tests
+silently turned it into "wait forever". The only correct spelling for
+optional time values is ``is not None`` / ``is None``.
+
+The rule flags truthiness tests — ``if``/``while``/ternary conditions,
+``and``/``or`` operands, ``not x`` — whose subject is a timeout-like value:
+a name whose ``_``-separated tokens include ``timeout``, ``deadline``,
+``ttl``, ``expiry`` or ``interval``, an attribute ending in one, or a
+variable assigned from an expression over such names. Comparisons
+(``timeout > 0``, ``deadline is not None``) are fine and never flagged.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.analyze.core import Checker, Finding, Source, register
+
+_TOKENS = {"timeout", "deadline", "ttl", "expiry", "interval"}
+
+
+def _timey_name(name: str) -> bool:
+    return any(tok in _TOKENS for tok in name.lower().split("_"))
+
+
+def _subject_name(node: ast.AST) -> str | None:
+    """The trailing identifier of a Name/Attribute, else None."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return None
+
+
+class _FunctionScan(ast.NodeVisitor):
+    def __init__(self, src: Source) -> None:
+        self.src = src
+        self.findings: list[Finding] = []
+        # names assigned from a timeout-like expression in this function
+        self.tainted: set[str] = set()
+
+    # -- taint tracking ----------------------------------------------------
+    def _value_timey(self, node: ast.AST) -> bool:
+        """Is this expression itself a timeout-like *value*? Comparisons,
+        comprehensions and ordinary calls produce bools/collections/opaque
+        results and are never timey, even when a timeout name appears
+        inside them."""
+        if isinstance(node, (ast.Name, ast.Attribute)):
+            name = _subject_name(node)
+            return name is not None and (_timey_name(name)
+                                         or name in self.tainted)
+        if isinstance(node, ast.BinOp):
+            return self._value_timey(node.left) or self._value_timey(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self._value_timey(node.operand)
+        if isinstance(node, ast.IfExp):
+            return self._value_timey(node.body) or self._value_timey(node.orelse)
+        if isinstance(node, ast.BoolOp):
+            return any(self._value_timey(v) for v in node.values)
+        if isinstance(node, ast.Call):
+            # value-preserving builtins keep timeyness; anything else is
+            # an opaque result
+            return (isinstance(node.func, ast.Name)
+                    and node.func.id in {"min", "max", "abs", "float"}
+                    and any(self._value_timey(a) for a in node.args))
+        return False
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        if self._value_timey(node.value):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    self.tainted.add(tgt.id)
+        self.generic_visit(node)
+
+    # -- truthiness contexts ----------------------------------------------
+    def _flag(self, node: ast.AST, ctx: str) -> None:
+        name = _subject_name(node)
+        direct = name is not None and (_timey_name(name)
+                                       or name in self.tainted)
+        # `x or default` with an arithmetic operand over a timeout-like
+        # name (`self.batch_interval / 10 or 0.001`) conflates 0 the same
+        # way a bare name does
+        arith = (isinstance(node, ast.BinOp) and ctx == "or operand"
+                 and self._value_timey(node))
+        if direct or arith:
+            label = name if name is not None else ast.unparse(node)
+            self.findings.append(Finding(
+                "deadline-truthiness", self.src.path,
+                node.lineno, node.col_offset,
+                f"truthiness test of timeout-like value `{label}` ({ctx}) "
+                f"conflates 0 with None; compare `is not None` instead"))
+
+    def _check_test(self, test: ast.AST, ctx: str) -> None:
+        if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+            self._flag(test.operand, f"not-test in {ctx}")
+        else:
+            self._flag(test, ctx)
+
+    def visit_If(self, node: ast.If) -> None:
+        self._check_test(node.test, "if condition")
+        self.generic_visit(node)
+
+    def visit_While(self, node: ast.While) -> None:
+        self._check_test(node.test, "while condition")
+        self.generic_visit(node)
+
+    def visit_IfExp(self, node: ast.IfExp) -> None:
+        self._check_test(node.test, "ternary condition")
+        self.generic_visit(node)
+
+    def visit_BoolOp(self, node: ast.BoolOp) -> None:
+        ctx = "or operand" if isinstance(node.op, ast.Or) else "and operand"
+        for value in node.values:
+            self._flag(value, ctx)
+        self.generic_visit(node)
+
+    def visit_Assert(self, node: ast.Assert) -> None:
+        # tests assert truthiness of all sorts of things; stay quiet
+        return
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        return  # nested defs get their own scan (and their own taint set)
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+    visit_ClassDef = visit_FunctionDef
+
+
+@register
+class DeadlineTruthiness(Checker):
+    name = "deadline-truthiness"
+    description = ("truthiness test on a timeout/deadline value "
+                   "(0 becomes 'no limit')")
+
+    def check(self, src: Source):
+        for node in ast.walk(src.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                scan = _FunctionScan(src)
+                for stmt in node.body:
+                    scan.visit(stmt)
+                yield from scan.findings

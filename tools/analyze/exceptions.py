@@ -1,0 +1,63 @@
+"""swallowed-exception: a handler that eats everything hides real bugs.
+
+A bare ``except:`` (which also catches ``KeyboardInterrupt`` and
+``SystemExit``) and an ``except Exception: pass`` body both turn broker
+corruption, torn frames, and lock-state bugs into silence — the delivery
+runtime's whole point is that sink failures are *routed* (retry / skip /
+dead-letter), never dropped on the floor.
+
+Narrow handlers (``except OSError: pass`` on a teardown path) are fine
+and never flagged. Intentional blanket handlers — e.g. rendering must
+never kill the pipeline — carry an ``# analyze: ok swallowed-exception``
+suppression with the reason in the comment.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.analyze.core import Checker, Finding, Source, register
+
+_BROAD = {"Exception", "BaseException"}
+
+
+def _broad_types(node: ast.AST | None) -> bool:
+    if node is None:
+        return True  # bare except
+    if isinstance(node, ast.Name):
+        return node.id in _BROAD
+    if isinstance(node, ast.Tuple):
+        return any(_broad_types(e) for e in node.elts)
+    return False
+
+
+def _body_swallows(body: list[ast.stmt]) -> bool:
+    for stmt in body:
+        if isinstance(stmt, ast.Pass):
+            continue
+        if (isinstance(stmt, ast.Expr)
+                and isinstance(stmt.value, ast.Constant)):
+            continue  # docstring / ellipsis
+        return False
+    return True
+
+
+@register
+class SwallowedException(Checker):
+    name = "swallowed-exception"
+    description = "bare `except:` or `except Exception: pass`"
+
+    def check(self, src: Source):
+        for node in ast.walk(src.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            if node.type is None:
+                yield Finding(
+                    self.name, src.path, node.lineno, node.col_offset,
+                    "bare `except:` also catches KeyboardInterrupt/"
+                    "SystemExit; name the exceptions or use `except "
+                    "Exception` with real handling")
+            elif _broad_types(node.type) and _body_swallows(node.body):
+                yield Finding(
+                    self.name, src.path, node.lineno, node.col_offset,
+                    "`except Exception: pass` swallows every failure "
+                    "silently; handle, log, or narrow the type")

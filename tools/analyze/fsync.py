@@ -1,0 +1,68 @@
+"""replace-without-fsync: an atomic rename is only atomic if the data got
+to disk first.
+
+PR 5 added the checkpoint's ``fsync`` before rename and PR 8 closed the
+same power-loss hole for durable-log segment creation: ``os.replace(tmp,
+final)`` guarantees *which name* survives a crash, but without
+``flush()`` + ``os.fsync()`` on the temp file the surviving name can
+point at empty or torn bytes.
+
+The rule: for every ``os.replace(...)`` call, the span of the enclosing
+function since the *previous* ``os.replace`` (write-rename sequences
+partition a function) must contain both a ``.flush()`` call and an
+``os.fsync(...)`` call. An fsync under a policy conditional (``if
+self.fsync != "never": ...``) counts — the degraded mode is an explicit
+caller choice, which is exactly the contract `state.py` documents.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.analyze.core import Checker, Finding, Source, call_name, register
+
+
+@register
+class ReplaceWithoutFsync(Checker):
+    name = "replace-without-fsync"
+    description = "`os.replace` without a preceding flush+fsync of the temp file"
+
+    def check(self, src: Source):
+        for node in ast.walk(src.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield from self._check_function(src, node)
+
+    def _walk_shallow(self, node: ast.AST):
+        """Walk without descending into nested defs — those are checked
+        as functions in their own right."""
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef)):
+                continue
+            yield child
+            yield from self._walk_shallow(child)
+
+    def _check_function(self, src: Source, fn: ast.AST):
+        calls: list[tuple[int, str, ast.Call]] = []
+        for node in self._walk_shallow(fn):
+            if isinstance(node, ast.Call):
+                name = call_name(node)
+                if name == "os.replace":
+                    calls.append((node.lineno, "replace", node))
+                elif name == "os.fsync":
+                    calls.append((node.lineno, "fsync", node))
+                elif name is not None and name.endswith(".flush"):
+                    calls.append((node.lineno, "flush", node))
+        calls.sort(key=lambda c: c[0])
+        seen: set[str] = set()
+        for line, kind, node in calls:
+            if kind != "replace":
+                seen.add(kind)
+                continue
+            missing = {"flush", "fsync"} - seen
+            if missing:
+                yield Finding(
+                    self.name, src.path, node.lineno, node.col_offset,
+                    f"os.replace without a preceding "
+                    f"{' + '.join(sorted(missing))} in this write-rename "
+                    f"sequence; a crash can publish torn or empty bytes")
+            seen = set()  # next write-rename sequence starts fresh

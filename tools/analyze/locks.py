@@ -1,0 +1,210 @@
+"""lock-discipline: attributes guarded somewhere must be guarded everywhere.
+
+PR 6's ``MetricsSink`` shipped with ``observe()`` and ``write_batch()``
+racing on plain int counters and a ``latencies`` list from different
+delivery-lane worker threads; the fix wrapped every surface in one lock.
+This rule keeps that class of bug from coming back, in two clauses:
+
+1. **consistency** — within a class, an attribute written under
+   ``with self.<lock>`` in any method must not be written bare in another
+   method. Private helpers whose every intra-class call site sits under
+   the lock are treated as lock-held (fixpoint), matching the repo's
+   ``_append_frames``-style "caller holds the lock" idiom; ``__init__``
+   is exempt (no other thread can hold a reference yet).
+
+2. **sink counters** — classes implementing the delivery-lane surfaces
+   (``write_batch`` / ``observe``) run on lane worker threads by contract
+   (`docs/data_subsystem.md`), so mutating writes (``+=``, ``append``,
+   ``add`` ...) to ``self`` attributes inside those methods (and the
+   ``_write_one`` hook they call) must happen under a ``with self.<lock>``
+   block. This is the clause that catches the original, entirely
+   lock-free ``MetricsSink``.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+
+from tools.analyze.core import (Checker, Finding, Source, dotted_self_path,
+                                register)
+
+_MUTATORS = {"append", "appendleft", "add", "extend", "insert", "update",
+             "pop", "popleft", "remove", "discard", "clear", "setdefault"}
+
+_SINK_METHODS = {"write_batch", "observe", "_write_one"}
+
+
+def _is_lock_attr(name: str) -> bool:
+    return "lock" in name.lower()
+
+
+@dataclass
+class _Write:
+    path: str        # "self.attr" (base attribute of the dotted chain)
+    node: ast.AST
+    locked: bool
+    mutator: bool    # via .append()/.add()/... rather than assignment
+
+
+@dataclass
+class _Method:
+    name: str
+    node: ast.AST
+    writes: list[_Write] = field(default_factory=list)
+    # self-method call sites: (callee name, was the call under a lock)
+    calls: list[tuple[str, bool]] = field(default_factory=list)
+
+
+def _base_attr(dotted: str) -> str:
+    # "self.metrics.enqueued" guards/races on the `metrics` binding's
+    # holder only through `self.metrics`; track the first hop
+    parts = dotted.split(".")
+    return ".".join(parts[:2])
+
+
+class _MethodScan(ast.NodeVisitor):
+    def __init__(self, method: _Method) -> None:
+        self.m = method
+        self.depth = 0  # with-lock nesting
+
+    def visit_With(self, node: ast.With) -> None:
+        locked = any(
+            (p := dotted_self_path(item.context_expr)) is not None
+            and _is_lock_attr(p)
+            for item in node.items)
+        if locked:
+            self.depth += 1
+        for stmt in node.body:
+            self.visit(stmt)
+        if locked:
+            self.depth -= 1
+
+    def _record_write(self, target: ast.AST, mutator: bool = False) -> None:
+        dotted = dotted_self_path(target)
+        if dotted is None or dotted == "self":
+            return
+        base = _base_attr(dotted)
+        if _is_lock_attr(base):
+            return
+        self.m.writes.append(_Write(base, target, self.depth > 0, mutator))
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        for tgt in node.targets:
+            if isinstance(tgt, ast.Subscript):
+                tgt = tgt.value  # self.d[k] = v writes into self.d
+            self._record_write(tgt)
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        tgt = node.target
+        if isinstance(tgt, ast.Subscript):
+            tgt = tgt.value
+        self._record_write(tgt)
+        self.generic_visit(node)
+
+    def visit_AnnAssign(self, node: ast.AnnAssign) -> None:
+        if node.value is not None:
+            self._record_write(node.target)
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        func = node.func
+        if isinstance(func, ast.Attribute):
+            dotted = dotted_self_path(func.value)
+            if dotted is not None:
+                if dotted == "self":
+                    # self._helper(...) — an intra-class call site
+                    self.m.calls.append((func.attr, self.depth > 0))
+                elif func.attr in _MUTATORS:
+                    self._record_write(func.value, mutator=True)
+        self.generic_visit(node)
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        return  # nested defs run on unknown threads; out of scope
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+    visit_ClassDef = visit_FunctionDef
+
+
+def _lock_held_methods(methods: dict[str, _Method]) -> set[str]:
+    """Private methods whose every intra-class call site is under a lock
+    (directly, or via another lock-held method). Fixpoint iteration."""
+    held: set[str] = set()
+    while True:
+        changed = False
+        for name, m in methods.items():
+            if name in held or not name.startswith("_") or name == "__init__":
+                continue
+            sites = [(caller, locked)
+                     for caller, cm in methods.items()
+                     for callee, locked in cm.calls if callee == name]
+            # a call from __init__ is as safe as a locked one: no other
+            # thread holds a reference during construction
+            if sites and all(locked or caller == "__init__"
+                             or caller in held
+                             for caller, locked in sites):
+                held.add(name)
+                changed = True
+        if not changed:
+            return held
+
+
+@register
+class LockDiscipline(Checker):
+    name = "lock-discipline"
+    description = ("attribute guarded by `with self._lock` in one method "
+                   "written bare in another / unguarded sink counters")
+
+    def check(self, src: Source):
+        for node in ast.walk(src.tree):
+            if isinstance(node, ast.ClassDef):
+                yield from self._check_class(src, node)
+
+    def _check_class(self, src: Source, cls: ast.ClassDef):
+        methods: dict[str, _Method] = {}
+        for stmt in cls.body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                m = _Method(stmt.name, stmt)
+                scan = _MethodScan(m)
+                for sub in stmt.body:
+                    scan.visit(sub)
+                methods[stmt.name] = m
+
+        held = _lock_held_methods(methods)
+
+        def effectively_locked(method: _Method, w: _Write) -> bool:
+            return w.locked or method.name in held
+
+        # clause 1: guarded-somewhere must be guarded-everywhere
+        guarded = {w.path for m in methods.values() for w in m.writes
+                   if effectively_locked(m, w) and m.name != "__init__"}
+        for m in methods.values():
+            if m.name == "__init__":
+                continue  # construction happens-before publication
+            for w in m.writes:
+                if w.path in guarded and not effectively_locked(m, w):
+                    how = "mutated" if w.mutator else "written"
+                    yield Finding(
+                        self.name, src.path, w.node.lineno,
+                        w.node.col_offset,
+                        f"`{w.path}` is {how} without the lock in "
+                        f"`{cls.name}.{m.name}` but written under "
+                        f"`with self.<lock>` elsewhere in the class")
+
+        # clause 2: delivery-lane sink surfaces must guard counters.
+        # `write_batch` is the Sink protocol's entry point — only classes
+        # implementing it are handed to lanes (LagPolicy-style observers
+        # with a solo `observe` stay on one thread).
+        if "write_batch" not in methods:
+            return
+        for m in methods.values():
+            if m.name not in _SINK_METHODS:
+                continue
+            for w in m.writes:
+                if not effectively_locked(m, w):
+                    yield Finding(
+                        self.name, src.path, w.node.lineno,
+                        w.node.col_offset,
+                        f"`{w.path}` updated in `{cls.name}.{m.name}` "
+                        f"without a lock; sink surfaces run on delivery-"
+                        f"lane worker threads (PR-6 MetricsSink bug class)")

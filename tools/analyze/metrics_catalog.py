@@ -1,0 +1,88 @@
+"""metric-catalog-drift: every registered metric is documented, and the
+docs never advertise a metric nothing registers.
+
+``docs/observability.md``'s catalog is the operator contract — dashboards
+and alerts are written against it. Each layer registers its instruments
+at construction time via ``registry.counter/gauge/histogram("name",
+...)``; this rule extracts those name literals from ``src/repro/`` and
+diffs them against the catalog tables (the first cell of each ``|``-row
+in the "Metric catalog" section, ``{label}`` suffixes stripped).
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+
+from tools.analyze.core import (Finding, Project, ProjectChecker, register)
+
+_KINDS = {"counter", "gauge", "histogram"}
+_NAME_RE = re.compile(r"^[a-z][a-z0-9_]*$")
+_SPAN_RE = re.compile(r"`([^`]+)`")
+
+DOC_RELPATH = os.path.join("docs", "observability.md")
+
+
+def _code_metrics(project: Project) -> dict[str, tuple[str, int]]:
+    """metric name -> (path, line) of the registration call."""
+    out: dict[str, tuple[str, int]] = {}
+    for src in project.sources:
+        norm = src.path.replace(os.sep, "/")
+        if "repro/" not in norm:
+            continue
+        for node in ast.walk(src.tree):
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr in _KINDS and node.args):
+                first = node.args[0]
+                if (isinstance(first, ast.Constant)
+                        and isinstance(first.value, str)):
+                    out.setdefault(first.value, (src.path, node.lineno))
+    return out
+
+
+def _doc_metrics(doc_path: str) -> dict[str, int]:
+    """metric name -> line in the catalog section of observability.md."""
+    with open(doc_path, encoding="utf-8") as f:
+        lines = f.read().splitlines()
+    out: dict[str, int] = {}
+    in_catalog = False
+    for i, line in enumerate(lines, start=1):
+        if line.startswith("## "):
+            in_catalog = line.lower().startswith("## metric catalog")
+            continue
+        if not in_catalog or not line.lstrip().startswith("|"):
+            continue
+        first_cell = line.lstrip().lstrip("|").split("|", 1)[0]
+        for span in _SPAN_RE.findall(first_cell):
+            name = re.sub(r"\{[^}]*\}", "", span).strip()
+            if _NAME_RE.match(name):
+                out.setdefault(name, i)
+    return out
+
+
+@register
+class MetricCatalogDrift(ProjectChecker):
+    name = "metric-catalog-drift"
+    description = ("registered metric names vs docs/observability.md "
+                   "catalog must agree both ways")
+
+    def check_project(self, project: Project):
+        doc_path = os.path.join(project.root, DOC_RELPATH)
+        if not os.path.exists(doc_path):
+            return  # fixture trees without docs: nothing to diff against
+        code = _code_metrics(project)
+        if not code:
+            return  # analyzing a subtree with no registrations
+        docs = _doc_metrics(doc_path)
+        for name in sorted(set(code) - set(docs)):
+            path, line = code[name]
+            yield Finding(
+                self.name, path, line, 0,
+                f"metric `{name}` is registered here but missing from "
+                f"the {DOC_RELPATH} catalog")
+        for name in sorted(set(docs) - set(code)):
+            yield Finding(
+                self.name, doc_path, docs[name], 0,
+                f"metric `{name}` is in the {DOC_RELPATH} catalog but "
+                f"nothing under src/repro/ registers it")

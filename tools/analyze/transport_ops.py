@@ -1,0 +1,120 @@
+"""transport-op-parity: the wire protocol's three views must agree.
+
+Adding a broker op touches three places in ``repro/data/transport.py``:
+the ``_OPS`` allow-list (the server's security gate), the server dispatch
+(``BrokerServer``), and the client method issuing it (``RemoteBroker``).
+PR 7 and PR 8 each added five-plus ops and each had to hand-patch a
+missed view — a drift the type system cannot see because ops travel as
+strings. This rule cross-checks the actual source:
+
+- every op the client issues (``self._request("op", ...)`` or a
+  ``("op", args, kwargs)`` tuple handed to ``self._roundtrip``) must be
+  in ``_OPS``;
+- every op in ``_OPS`` must have a client-side issuer;
+- every op the server special-cases by string comparison must be in
+  ``_OPS``.
+
+Triggers only on files named ``transport.py`` that define ``_OPS``.
+"""
+from __future__ import annotations
+
+import ast
+import os
+
+from tools.analyze.core import (Finding, Project, ProjectChecker, Source,
+                                register)
+
+
+def _str_consts(node: ast.AST) -> set[str]:
+    return {n.value for n in ast.walk(node)
+            if isinstance(n, ast.Constant) and isinstance(n.value, str)}
+
+
+def _class_body(tree: ast.AST, name: str) -> ast.ClassDef | None:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef) and node.name == name:
+            return node
+    return None
+
+
+def _find_ops_literal(tree: ast.AST) -> tuple[set[str], int] | None:
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Assign)
+                and any(isinstance(t, ast.Name) and t.id == "_OPS"
+                        for t in node.targets)):
+            return _str_consts(node.value), node.lineno
+    return None
+
+
+def _client_issued_ops(cls: ast.ClassDef) -> set[str]:
+    ops: set[str] = set()
+    for node in ast.walk(cls):
+        if not isinstance(node, ast.Call):
+            continue
+        func = node.func
+        if not (isinstance(func, ast.Attribute)
+                and isinstance(func.value, ast.Name)
+                and func.value.id == "self"):
+            continue
+        if func.attr == "_request" and node.args:
+            first = node.args[0]
+            if isinstance(first, ast.Constant) and isinstance(first.value, str):
+                ops.add(first.value)
+        elif func.attr == "_roundtrip" and node.args:
+            first = node.args[0]
+            if (isinstance(first, ast.Tuple) and first.elts
+                    and isinstance(first.elts[0], ast.Constant)
+                    and isinstance(first.elts[0].value, str)):
+                ops.add(first.elts[0].value)
+    return ops
+
+
+def _server_special_ops(cls: ast.ClassDef) -> set[str]:
+    """Ops the server compares against the ``op`` variable by string."""
+    ops: set[str] = set()
+    for node in ast.walk(cls):
+        if not isinstance(node, ast.Compare):
+            continue
+        sides = [node.left] + list(node.comparators)
+        if any(isinstance(s, ast.Name) and s.id == "op" for s in sides):
+            for s in sides:
+                ops |= _str_consts(s)
+    return ops
+
+
+@register
+class TransportOpParity(ProjectChecker):
+    name = "transport-op-parity"
+    description = ("_OPS allow-list vs BrokerServer dispatch vs "
+                   "RemoteBroker issuers must agree")
+
+    def check_project(self, project: Project):
+        for src in project.sources:
+            if os.path.basename(src.path) != "transport.py":
+                continue
+            found = _find_ops_literal(src.tree)
+            if found is None:
+                continue
+            allow, ops_line = found
+            server = _class_body(src.tree, "BrokerServer")
+            client = _class_body(src.tree, "RemoteBroker")
+            if server is not None:
+                for op in sorted(_server_special_ops(server) - allow):
+                    yield Finding(
+                        self.name, src.path, ops_line, 0,
+                        f"BrokerServer dispatches op `{op}` but it is "
+                        f"missing from the _OPS allow-list")
+            if client is not None:
+                issued = _client_issued_ops(client)
+                for op in sorted(issued - allow):
+                    yield Finding(
+                        self.name, src.path, ops_line, 0,
+                        f"RemoteBroker issues op `{op}` but it is missing "
+                        f"from the _OPS allow-list (the server will "
+                        f"reject it)")
+                for op in sorted(allow - issued):
+                    yield Finding(
+                        self.name, src.path, ops_line, 0,
+                        f"op `{op}` is allow-listed in _OPS but no "
+                        f"RemoteBroker method issues it (dead surface "
+                        f"or a missing client method)")

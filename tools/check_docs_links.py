@@ -2,6 +2,11 @@
 other docs) must exist, and every file in ``docs/`` must be reachable from
 README — otherwise the doc is dead weight nobody can find.
 
+Also cross-checks ``docs/static_analysis.md``: every rule named in its
+"Rule catalog" table must exist in the ``tools.analyze`` registry and
+vice versa, so the operator-facing catalog cannot drift from the code
+the same way the metric catalog used to.
+
 Run by ``make deps-check``. Exits non-zero with one line per problem.
 """
 from __future__ import annotations
@@ -17,6 +22,30 @@ DOC_REF = re.compile(r"docs/[A-Za-z0-9_\-./]+?\.md")
 def refs_in(path: str) -> set[str]:
     with open(path, encoding="utf-8") as f:
         return set(DOC_REF.findall(f.read()))
+
+
+def check_rule_catalog(problems: list[str]) -> None:
+    doc = os.path.join(REPO, "docs", "static_analysis.md")
+    if not os.path.exists(doc):
+        problems.append("docs/static_analysis.md missing (rule catalog)")
+        return
+    sys.path.insert(0, REPO)
+    from tools.analyze import RULES
+
+    documented: set[str] = set()
+    in_catalog = False
+    with open(doc, encoding="utf-8") as f:
+        for line in f:
+            if line.startswith("## "):
+                in_catalog = line.strip() == "## Rule catalog"
+            elif in_catalog and line.startswith("| `"):
+                documented.add(line.split("`")[1])
+    for rule in sorted(documented - set(RULES)):
+        problems.append(f"docs/static_analysis.md catalogs `{rule}` but no "
+                        "such rule is registered in tools.analyze")
+    for rule in sorted(set(RULES) - documented):
+        problems.append(f"tools.analyze registers `{rule}` but "
+                        "docs/static_analysis.md's rule catalog omits it")
 
 
 def main() -> int:
@@ -42,11 +71,13 @@ def main() -> int:
     for doc in sorted(doc_files - refs_in(readme)):
         problems.append(f"{doc} exists but README.md never references it")
 
+    check_rule_catalog(problems)
+
     for p in problems:
         print(f"FAIL: {p}")
     if not problems:
         print(f"docs links ok ({len(doc_files)} docs, all referenced from "
-              "README and resolving)")
+              "README and resolving; analyzer rule catalog in sync)")
     return 1 if problems else 0
 
 
